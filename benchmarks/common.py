@@ -1,0 +1,32 @@
+"""Shared benchmark helpers: timing, cost analysis, CSV emission."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def wall_us(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def cost_of(fn, *args) -> dict:
+    """flops / bytes accessed of the jitted fn at these args."""
+    c = jax.jit(fn).lower(*args).compile().cost_analysis()
+    c = c or {}
+    return {"flops": float(c.get("flops", 0.0) or 0.0),
+            "bytes": float(c.get("bytes accessed", 0.0) or 0.0)}
+
+
+def emit(rows, header):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(r.get(h, "")) for h in header))
+    return rows

@@ -1,0 +1,68 @@
+"""Paper Fig. 5 reproduction: relative speedup over int16 conv2d across the
+(W, A) precision grid, native (5a, stock-Ara ULPPACK) vs vmacsr (5b, Sparq),
+plus the overflow-free region boundary.
+
+The region boundary is exact math (core.packing.k_tile_bound); the paper's
+N+M <= 7 LP boundary must fall out (asserted).  Speedups come from the
+instruction-count model (per-output vector-issue counts), the same model
+whose W2A2/W3A3 points are calibrated against Fig. 4.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core import packing, vmacsr
+from repro.core.packing import PackSpec
+
+K = 7 * 7 * 32   # 7x7 kernel over 32 channels (paper Fig. 5 setting)
+
+
+def run(quick: bool = False):
+    del quick
+    rows = []
+    for wb in range(1, 5):
+        for ab in range(1, 5):
+            for mode in ("native", "vmacsr"):
+                # pick the densest feasible lane (int8 preferred: 2x lanes)
+                spec = None
+                for lane in (jnp.int8.dtype, jnp.int16.dtype):
+                    cand = PackSpec(wb, ab, lane)
+                    if cand.feasible:
+                        spec = cand
+                        break
+                if spec is None:
+                    rows.append({"mode": mode, "w_bits": wb, "a_bits": ab,
+                                 "lane": "-", "k_tile": 0,
+                                 "speedup_vs_int16": "overflow"})
+                    continue
+                if mode == "native":
+                    ic = vmacsr.native_ulppack_instruction_count(
+                        K, spec.k_tile, spec.n_pack)
+                else:
+                    ic = vmacsr.vmacsr_instruction_count(
+                        K, spec.k_tile, spec.n_pack)
+                width_gain = 2 if spec.lane_dtype == jnp.int8.dtype else 1
+                speed = (vmacsr.int16_instruction_count(K).total
+                         / ic.total) * width_gain
+                rows.append({
+                    "mode": mode, "w_bits": wb, "a_bits": ab,
+                    "lane": str(jnp.dtype(spec.lane_dtype).name),
+                    "k_tile": spec.k_tile,
+                    "speedup_vs_int16": round(speed, 2),
+                })
+
+    # overflow-region assertions (paper §IV-A): int16 lanes obey N+M<=7
+    region = packing.overflow_free_region(jnp.int16.dtype, max_bits=4)
+    for (wb, ab), kt in region.items():
+        assert (kt >= 1) == (wb + ab <= 7), (wb, ab, kt)
+    print("# overflow-free region (int16 lanes) == {N+M<=7}: verified")
+
+    emit(rows, ["mode", "w_bits", "a_bits", "lane", "k_tile",
+                "speedup_vs_int16"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,105 @@
+"""Aggregate reports/dryrun/*.json into the §Roofline table (markdown+CSV)."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+REPORT_DIR = Path(__file__).resolve().parents[1] / "reports" / "dryrun"
+OUT_MD = Path(__file__).resolve().parents[1] / "reports" / "roofline.md"
+
+COLS = ["arch", "shape", "mesh", "status", "compute_s", "memory_s",
+        "collective_s", "dominant", "compute_floor_s", "useful_ratio",
+        "temp_gib", "compile_s"]
+
+
+def load_rows():
+    """Aggregate cell JSONs with trip-count correction.
+
+    XLA cost analysis counts while-loop bodies ONCE.  The train step's outer
+    loop is the microbatch-accumulation scan with a statically known trip
+    count (cfg.parallel.microbatches) — we scale all three per-step terms by
+    it.  The q-chunked attention map still undercounts attention FLOPs, so we
+    also report `compute_floor_s` = analytic MODEL_FLOPS/(chips*peak), and
+    the dominant term uses max(compute, compute_floor).
+    """
+    from repro import configs
+    from repro.roofline import hw
+
+    rows = []
+    if not REPORT_DIR.exists():
+        return rows
+    for f in sorted(REPORT_DIR.glob("*.json")):
+        d = json.loads(f.read_text())
+        temp = d.get("memory_analysis", {}).get("temp_size_in_bytes")
+        scale = 1
+        if d.get("status") == "OK" and d.get("shape") == "train_4k":
+            try:
+                scale = max(1, configs.get_config(
+                    d["arch"]).parallel.microbatches)
+            except KeyError:
+                pass
+        comp = (d.get("compute_s") or 0) * scale
+        mem = (d.get("memory_s") or 0) * scale
+        coll = (d.get("collective_s") or 0) * scale
+        mesh_name = d.get("mesh") or "16x16"
+        chips = 1
+        for x in mesh_name.split("x"):
+            chips *= int(x)
+        mflops = d.get("model_flops") or 0
+        floor = mflops / (chips * hw.PEAK_FLOPS_BF16) if mflops else 0
+        hlo_flops = (d.get("hlo_flops_per_device") or 0) * scale
+        useful = mflops / (hlo_flops * chips) if hlo_flops else None
+        dom = ""
+        if d.get("status") == "OK":
+            vals = {"compute": max(comp, floor), "memory": mem,
+                    "collective": coll}
+            dom = max(vals, key=vals.get)
+        rows.append({
+            "arch": d.get("arch"), "shape": d.get("shape"),
+            "mesh": d.get("mesh"), "status": d.get("status"),
+            "compute_s": _f(comp) if d.get("status") == "OK" else "",
+            "memory_s": _f(mem) if d.get("status") == "OK" else "",
+            "collective_s": _f(coll) if d.get("status") == "OK" else "",
+            "dominant": dom,
+            "compute_floor_s": _f(floor) if d.get("status") == "OK" else "",
+            "useful_ratio": _f(useful),
+            "temp_gib": round(temp / 2**30, 2) if temp else "",
+            "compile_s": d.get("compile_s", ""),
+            "error": (d.get("error") or "")[:80],
+        })
+    return rows
+
+
+def _f(x):
+    if x is None:
+        return ""
+    try:
+        v = float(x)
+    except (TypeError, ValueError):
+        return ""
+    if v == 0:
+        return 0.0
+    return float(f"{v:.4g}")
+
+
+def run(quick: bool = False):
+    del quick
+    rows = load_rows()
+    print(",".join(COLS))
+    for r in rows:
+        print(",".join(str(r.get(c, "")) for c in COLS))
+    # markdown table
+    lines = ["| " + " | ".join(COLS) + " |",
+             "|" + "---|" * len(COLS)]
+    for r in rows:
+        lines.append("| " + " | ".join(str(r.get(c, "")) for c in COLS)
+                     + " |")
+    OUT_MD.parent.mkdir(parents=True, exist_ok=True)
+    OUT_MD.write_text("\n".join(lines) + "\n")
+    print(f"# wrote {OUT_MD} ({len(rows)} cells)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Benchmark harness — one module per paper table/figure (DESIGN.md §7).
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Emits ``name,us_per_call,derived`` style CSV blocks per benchmark plus the
+aggregated roofline table from the dry-run reports.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller shapes (CI-speed)")
+    ap.add_argument("--only", default="",
+                    help="comma-list: fig4,fig5,table2,roofline,serve")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (fig4_conv2d, fig5_precision_sweep,
+                            roofline_table, serve_microbench,
+                            table2_kernel_report)
+
+    benches = [
+        ("fig4_conv2d  [paper Fig.4: conv2d impl comparison]",
+         "fig4", fig4_conv2d.run),
+        ("fig5_precision_sweep  [paper Fig.5: (W,A) region + speedups]",
+         "fig5", fig5_precision_sweep.run),
+        ("table2_kernel_report  [paper Table II analogue: kernel report]",
+         "table2", table2_kernel_report.run),
+        ("serve_microbench  [packed vs bf16/int serving linears]",
+         "serve", serve_microbench.run),
+        ("roofline_table  [assignment: 40-cell dry-run aggregate]",
+         "roofline", roofline_table.run),
+    ]
+    failures = 0
+    for title, key, fn in benches:
+        if only and key not in only:
+            continue
+        print(f"\n=== {title} ===")
+        t0 = time.time()
+        try:
+            fn(quick=args.quick)
+            print(f"# done in {time.time()-t0:.1f}s")
+        except Exception as e:  # keep the harness running
+            failures += 1
+            print(f"# FAILED: {type(e).__name__}: {e}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

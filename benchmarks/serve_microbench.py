@@ -1,0 +1,67 @@
+"""Serving-linear microbench: bf16 vs unpacked-int vs packed ULPPACK paths
+at decode shapes, on CPU XLA (wall-clock) + compiled FLOP/byte counts.
+
+This is the LM-integration counterpart of fig4 (which benches the paper's
+conv2d): the same packed arithmetic applied to a transformer projection.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import cost_of, emit, wall_us
+from repro.core.packing import PackSpec
+from repro.kernels import ops
+
+
+def run(quick: bool = False):
+    m = 8                       # decode rows per device
+    k, n = (1024, 1024) if quick else (4096, 4096)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)) * 0.05, jnp.float32)
+    rows = []
+
+    wb16 = w.astype(jnp.bfloat16)
+
+    def bf16(x):
+        return jnp.dot(x.astype(jnp.bfloat16), wb16)
+
+    c = cost_of(bf16, x)
+    rows.append({"path": "bf16", "wall_us": round(wall_us(bf16, x), 1),
+                 **c, "weight_bytes": wb16.size * 2})
+
+    w8 = jnp.clip(jnp.round(w / 0.01), -127, 127).astype(jnp.int8)
+
+    def int8(x):
+        q = jnp.clip(jnp.round(x / 0.05), -127, 127).astype(jnp.int8)
+        return ops.int_matmul(q, w8, backend="xla")
+
+    c = cost_of(int8, x)
+    rows.append({"path": "int8-unpacked", "wall_us": round(wall_us(int8, x),
+                                                           1),
+                 **c, "weight_bytes": w8.size})
+
+    for wb, ab in ((1, 1), (2, 2), (3, 3)):
+        spec = PackSpec(wb, ab, jnp.int16.dtype)
+        wp, cs = ops.prepare_weights(w, jnp.float32(0.02), jnp.int32(
+            1 << (wb - 1)), spec)
+
+        def packed(x, wp=wp, cs=cs, spec=spec, wb=wb):
+            return ops.quantized_linear(
+                x, wp, cs, jnp.float32(0.07),
+                jnp.int32(1 << (ab - 1)), jnp.float32(0.02),
+                jnp.int32(1 << (wb - 1)), spec, backend="xla")
+
+        c = cost_of(packed, x)
+        rows.append({"path": f"packed-W{wb}A{ab}",
+                     "wall_us": round(wall_us(packed, x), 1), **c,
+                     "weight_bytes": wp.size * 2})
+
+    emit(rows, ["path", "wall_us", "flops", "bytes", "weight_bytes"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

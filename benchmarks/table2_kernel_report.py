@@ -1,0 +1,115 @@
+"""Paper Table II analogue: physical-implementation report, TPU edition.
+
+Table II reports silicon area/power/fmax for the Ara vs Sparq lane — no TPU
+analogue exists (DESIGN.md §7).  The deployment-relevant counterparts we CAN
+measure from the compiled artifacts:
+
+  * HLO op census of the serving linear: the packed path's inner loop is
+    integer-only (the paper's "FPU removal" maps to float-free inner
+    compute; floats only in the final dequant epilogue),
+  * kernel VMEM working set per BlockSpec (must fit the 16 MiB v5e budget),
+  * bytes/FLOP (arithmetic intensity) per path,
+  * serving parameter bytes: bf16 vs packed-int16 lanes vs bit-dense storage
+    (the area-per-op analogue: HBM footprint per weight).
+"""
+
+from __future__ import annotations
+
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.packing import PackSpec
+from repro.kernels import ops
+from repro.roofline import hw
+
+M, K, N = 8, 2048, 2048   # decode-shaped linear
+
+
+def _census(fn, *args):
+    txt = jax.jit(fn).lower(*args).compile().as_text()
+    fl = len(re.findall(r"\b(f32|bf16|f16)\[", txt))
+    it = len(re.findall(r"\b(s8|s16|s32|u8|u16|u32)\[", txt))
+    c = jax.jit(fn).lower(*args).compile().cost_analysis() or {}
+    return {"float_type_mentions": fl, "int_type_mentions": it,
+            "flops": float(c.get("flops", 0) or 0),
+            "bytes": float(c.get("bytes accessed", 0) or 0)}
+
+
+def run(quick: bool = False):
+    del quick
+    rng = np.random.default_rng(0)
+    rows = []
+    spec = PackSpec(2, 2, jnp.int16.dtype)
+    x = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(K, N)) * 0.05, jnp.float32)
+    wp, cs = ops.prepare_weights(w, jnp.float32(0.02), jnp.int32(2), spec)
+
+    # bf16 baseline linear
+    wb = w.astype(jnp.bfloat16)
+
+    def bf16_linear(x, wb):
+        return jnp.dot(x.astype(jnp.bfloat16), wb)
+
+    c = _census(bf16_linear, x, wb)
+    rows.append({"path": "bf16-linear", **c,
+                 "intensity_flops_per_byte": round(c["flops"]
+                                                   / max(c["bytes"], 1), 3),
+                 "weight_bytes": wb.size * 2})
+
+    # packed integer core (the Sparq path without dequant epilogue)
+    ap = ops.quantize_pack(x, jnp.float32(0.07), jnp.int32(2), spec,
+                           backend="xla")[0]
+
+    def packed_core(ap, wp):
+        return ops.packed_matmul(ap, wp, spec, backend="xla")
+
+    c = _census(packed_core, ap, wp)
+    rows.append({"path": "packed-int-core(W2A2)", **c,
+                 "intensity_flops_per_byte": round(c["flops"]
+                                                   / max(c["bytes"], 1), 3),
+                 "weight_bytes": wp.size * 2})
+
+    # full deployed linear (pack + matmul + affine dequant)
+    def deployed(x, wp, cs):
+        return ops.quantized_linear(x, wp, cs, jnp.float32(0.07),
+                                    jnp.int32(2), jnp.float32(0.02),
+                                    jnp.int32(2), spec, backend="xla")
+
+    c = _census(deployed, x, wp, cs)
+    rows.append({"path": "deployed-linear(W2A2)", **c,
+                 "intensity_flops_per_byte": round(c["flops"]
+                                                   / max(c["bytes"], 1), 3),
+                 "weight_bytes": wp.size * 2})
+
+    # bit-dense storage variant (beyond-paper): true 2 bits/weight in HBM
+    from repro.core import quant as quant_lib
+    q_w = quant_lib.quantize_affine(w, jnp.float32(0.02), 2, 2)
+    dense_words = ops.dense_store_weights(q_w, 2)
+    rows.append({"path": "bit-dense-weights(W2)", "float_type_mentions": 0,
+                 "int_type_mentions": 0, "flops": 0, "bytes": 0,
+                 "intensity_flops_per_byte": "",
+                 "weight_bytes": dense_words.size * 4})
+
+    # kernel VMEM working sets (BlockSpec budget vs 16 MiB v5e VMEM)
+    bm, bn, chunks = 128, 128, 8
+    kt = spec.k_tile
+    bk = chunks * kt
+    vmem = (bm * bk + bk * bn) * 2 + (chunks + 1) * bm * bn * 4
+    rows.append({"path": f"pallas-matmul-blockspec bm={bm} bn={bn} bk={bk}",
+                 "float_type_mentions": 0, "int_type_mentions": 0,
+                 "flops": 0, "bytes": vmem,
+                 "intensity_flops_per_byte":
+                     f"vmem_frac={vmem / hw.VMEM_PER_CORE:.3f}",
+                 "weight_bytes": ""})
+
+    emit(rows, ["path", "flops", "bytes", "intensity_flops_per_byte",
+                "float_type_mentions", "int_type_mentions", "weight_bytes"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

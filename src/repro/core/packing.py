@@ -1,0 +1,264 @@
+"""ULPPACK operand-packing algebra (paper §III-B) adapted to TPU integer lanes.
+
+The "P1" packing scheme packs ``n_pack`` unsigned sub-byte operands into one
+wider integer lane with field stride ``2**shift``.  A single wide multiply of an
+activation lane against a *field-reversed* weight lane produces a product whose
+middle bit-field holds the ``n_pack``-term dot-product contribution:
+
+  n_pack=2:  (a0 + 2^S a1) * (w1 + 2^S w0)
+               = a0*w1 + 2^S * (a0*w0 + a1*w1) + 2^2S * a1*w0
+                 `-L-'         `-----D------'           `-H-'
+
+Extraction of D from an s32 accumulation of such products is exact iff the
+accumulated L stays below 2^S (no carry into D) and the accumulated D stays
+below 2^S (no overflow into H).  ``k_tile_bound`` returns the largest number of
+packed lanes that can be accumulated before an extraction is required — the
+TPU analogue of the paper's "local accumulation" bound, and the quantity the
+``vmacsr`` fused shift relaxes (see core/vmacsr.py and kernels/).
+
+All packing here operates on *unsigned* integer lattices stored in signed
+dtypes (int8/int16/int32); quantizers (core/quant.py) guarantee value ranges.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Lane dtype -> field shift S for 2-way packing (field width = S bits).
+LANE_SHIFT = {jnp.int8.dtype: 4, jnp.int16.dtype: 8, jnp.int32.dtype: 16}
+
+# Signed-lane headroom: packed value must stay <= max of the *signed* lane
+# dtype (the MXU consumes signed integers).
+LANE_MAX = {jnp.int8.dtype: 127, jnp.int16.dtype: 32767, jnp.int32.dtype: 2**31 - 1}
+
+
+@dataclasses.dataclass(frozen=True)
+class PackSpec:
+    """Static description of a packing configuration.
+
+    Attributes:
+      w_bits / a_bits: weight / activation precision (unsigned lattice width).
+      lane_dtype:      integer dtype of the packed lane fed to the MXU.
+      n_pack:          operands per lane (2, or 4 for the binary P4 extension).
+    """
+
+    w_bits: int
+    a_bits: int
+    lane_dtype: jnp.dtype = jnp.int16.dtype
+    n_pack: int = 2
+
+    def __post_init__(self):
+        object.__setattr__(self, "lane_dtype", jnp.dtype(self.lane_dtype))
+        if self.n_pack not in (2, 4):
+            raise ValueError(f"n_pack must be 2 or 4, got {self.n_pack}")
+        if self.n_pack == 4 and self.lane_dtype != jnp.int16.dtype:
+            raise ValueError("P4 packing is only defined for int16 lanes")
+
+    @property
+    def shift(self) -> int:
+        if self.n_pack == 2:
+            return LANE_SHIFT[self.lane_dtype]
+        return 4  # P4: four 4-bit fields in an int16 lane.
+
+    @property
+    def field_mask(self) -> int:
+        return (1 << self.shift) - 1
+
+    @property
+    def max_w(self) -> int:
+        return (1 << self.w_bits) - 1
+
+    @property
+    def max_a(self) -> int:
+        return (1 << self.a_bits) - 1
+
+    @property
+    def k_tile(self) -> int:
+        """Packed lanes accumulable before extraction (0 => infeasible)."""
+        return k_tile_bound(self.w_bits, self.a_bits, self.shift, self.n_pack)
+
+    @property
+    def feasible(self) -> bool:
+        return self.k_tile >= 1 and self.packed_value_fits
+
+    @property
+    def packed_value_fits(self) -> bool:
+        """Does the largest packed operand fit the signed lane dtype?"""
+        stride = 1 << self.shift
+        weights = sum(stride**i for i in range(self.n_pack))
+        biggest = max(self.max_w, self.max_a) * weights
+        # products must also accumulate exactly in int32 over a k_tile.
+        kt = max(self.k_tile, 1)
+        prod_bound = (self.max_a * weights) * (self.max_w * weights) * kt
+        return biggest <= LANE_MAX[self.lane_dtype] and prod_bound < 2**31
+
+    def __str__(self):
+        return (
+            f"W{self.w_bits}A{self.a_bits}/{np.dtype(self.lane_dtype).name}"
+            f"xP{self.n_pack}"
+        )
+
+
+def k_tile_bound(w_bits: int, a_bits: int, shift: int, n_pack: int = 2) -> int:
+    """Max packed lanes accumulable in s32 with exact shift-mask extraction.
+
+    Two constraints (paper §III-B, adapted — see DESIGN.md §2):
+      D-field:  sum of dot terms < 2^shift
+      L-carry:  sum of everything below the D band < 2^(n_pack-1)*shift
+    For n_pack=2 the D constraint binds (maxD = 2*maxL).  For n_pack=4 both are
+    checked explicitly.
+    """
+    max_w = (1 << w_bits) - 1
+    max_a = (1 << a_bits) - 1
+    per_lane_d = n_pack * max_w * max_a
+    if per_lane_d == 0:
+        return 0
+    field = (1 << shift) - 1
+    k_d = field // per_lane_d
+    # Everything strictly below the D band must not carry into it.  The D band
+    # sits at bit (n_pack-1)*shift; bands below it are j-term cross products.
+    low_per_lane = sum(
+        (j + 1) * max_w * max_a * (1 << (shift * j)) for j in range(n_pack - 1)
+    )
+    low_cap = (1 << (shift * (n_pack - 1))) - 1
+    k_l = low_cap // low_per_lane if low_per_lane else k_d
+    return max(0, min(k_d, k_l))
+
+
+def overflow_free_region(lane_dtype=jnp.int16.dtype, n_pack: int = 2,
+                         max_bits: int = 8):
+    """(w_bits, a_bits) -> k_tile table; reproduces paper Fig. 5 region shape."""
+    table = {}
+    for w in range(1, max_bits + 1):
+        for a in range(1, max_bits + 1):
+            spec = PackSpec(w, a, lane_dtype, n_pack)
+            table[(w, a)] = spec.k_tile if spec.packed_value_fits else 0
+    return table
+
+
+def _as_lane(x, spec: PackSpec):
+    return x.astype(spec.lane_dtype)
+
+
+def pad_to_multiple(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+def pack_activations(q: jax.Array, spec: PackSpec, axis: int = -1) -> jax.Array:
+    """Pack unsigned activation lattice values along ``axis``.
+
+    q[..., 2k] lands in the LOW field, q[..., 2k+1] in the HIGH field
+    (ascending field order).  Input length along axis is padded to n_pack.
+    """
+    axis = axis % q.ndim
+    q = pad_to_multiple(q.astype(jnp.int32), axis, spec.n_pack)
+    new_shape = list(q.shape)
+    new_shape[axis] //= spec.n_pack
+    new_shape.insert(axis + 1, spec.n_pack)
+    q = q.reshape(new_shape)
+    packed = jnp.zeros(new_shape[:axis + 1] + new_shape[axis + 2:], jnp.int32)
+    for j in range(spec.n_pack):
+        field = jax.lax.index_in_dim(q, j, axis + 1, keepdims=False)
+        packed = packed + (field << (spec.shift * j))
+    return _as_lane(packed, spec)
+
+
+def pack_weights(q: jax.Array, spec: PackSpec, axis: int = 0) -> jax.Array:
+    """Pack unsigned weight lattice values along ``axis`` in REVERSED field
+    order (P1 scheme) so the dot lands in the middle band."""
+    axis = axis % q.ndim
+    q = pad_to_multiple(q.astype(jnp.int32), axis, spec.n_pack)
+    new_shape = list(q.shape)
+    new_shape[axis] //= spec.n_pack
+    new_shape.insert(axis + 1, spec.n_pack)
+    q = q.reshape(new_shape)
+    packed = jnp.zeros(new_shape[:axis + 1] + new_shape[axis + 2:], jnp.int32)
+    for j in range(spec.n_pack):
+        field = jax.lax.index_in_dim(q, j, axis + 1, keepdims=False)
+        packed = packed + (field << (spec.shift * (spec.n_pack - 1 - j)))
+    return _as_lane(packed, spec)
+
+
+def unpack(packed: jax.Array, spec: PackSpec, axis: int = -1,
+           reversed_fields: bool = False) -> jax.Array:
+    """Inverse of pack_activations / pack_weights (for tests and debugging)."""
+    axis = axis % packed.ndim
+    p = packed.astype(jnp.int32)
+    fields = []
+    for j in range(spec.n_pack):
+        pos = (spec.n_pack - 1 - j) if reversed_fields else j
+        fields.append((p >> (spec.shift * pos)) & spec.field_mask)
+    stacked = jnp.stack(fields, axis=axis + 1)
+    shape = list(packed.shape)
+    shape[axis] *= spec.n_pack
+    return stacked.reshape(shape)
+
+
+def extract_dot(acc32: jax.Array, spec: PackSpec) -> jax.Array:
+    """Shift-mask extraction of the accumulated D band from s32 packed totals.
+
+    Valid only if the number of accumulated packed lanes is <= spec.k_tile —
+    tests assert tightness of that bound.
+    """
+    band = spec.shift * (spec.n_pack - 1)
+    return (acc32 >> band) & spec.field_mask
+
+
+def packed_dot_general(a_packed: jax.Array, w_packed: jax.Array,
+                       spec: PackSpec) -> jax.Array:
+    """One packed-tile contraction: [..., Kp] x [Kp, N] -> s32 packed totals.
+
+    Caller must guarantee Kp <= spec.k_tile.  ``preferred_element_type=int32``
+    keeps the MXU path exact.
+    """
+    return jax.lax.dot_general(
+        a_packed, w_packed,
+        dimension_numbers=(((a_packed.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def packed_matmul_reference(q_a: jax.Array, q_w: jax.Array,
+                            spec: PackSpec) -> jax.Array:
+    """Full packed matmul at the XLA level ("native ULPPACK" path, no fusion).
+
+    q_a: [M, K] unsigned activation lattice.  q_w: [K, N] unsigned weight
+    lattice.  Returns the exact integer dot product [M, N] (s32), computed via
+    packed tiles of k_tile lanes with extraction between tiles — the
+    reproduction of ULPPACK running on stock Ara (paper Fig. 5a).
+    """
+    if not spec.feasible:
+        raise ValueError(f"{spec} is outside the overflow-free region")
+    a = pack_activations(q_a, spec, axis=-1)
+    w = pack_weights(q_w, spec, axis=0)
+    kp = a.shape[-1]
+    kt = spec.k_tile
+    n_tiles = -(-kp // kt)
+    a = pad_to_multiple(a, -1, kt)
+    w = pad_to_multiple(w, 0, kt)
+    a_tiles = a.reshape(*a.shape[:-1], n_tiles, kt)
+    w_tiles = w.reshape(n_tiles, kt, w.shape[-1])
+
+    def body(carry, xs):
+        a_t, w_t = xs
+        packed_total = jax.lax.dot_general(
+            a_t, w_t, (((a_t.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        return carry + extract_dot(packed_total, spec), None
+
+    init = jnp.zeros((*q_a.shape[:-1], q_w.shape[-1]), jnp.int32)
+    a_scan = jnp.moveaxis(a_tiles, -2, 0)
+    out, _ = jax.lax.scan(body, init, (a_scan, w_tiles))
+    return out

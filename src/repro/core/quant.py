@@ -1,0 +1,210 @@
+"""Quantizers for sub-byte QNNs (paper §II-A context).
+
+Supports the quantization families the paper builds on:
+  * absmax / min-max affine calibration (post-training),
+  * SAWB-style statistical weight scales [Choi et al.],
+  * PACT-style learnable activation clipping,
+  * LSQ learned-step-size fake-quant for QAT [Esser et al.],
+
+All quantizers emit an *unsigned* lattice q in [0, 2^bits - 1] with affine
+dequant  x ~= scale * (q - zero_point),  because ULPPACK packing requires
+non-negative fields (DESIGN.md §4).  Weights use the midpoint zero-point
+2^(bits-1) ("signed values on an unsigned lattice"); activations use either
+z=0 (post-ReLU) or a calibrated/learned zero-point.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Quantization settings threaded through model configs."""
+
+    w_bits: int = 4
+    a_bits: int = 4
+    enabled: bool = False
+    # 'lsq' (QAT) or 'absmax' (PTQ) for weights; activations: 'lsq'|'minmax'.
+    w_method: str = "lsq"
+    a_method: str = "lsq"
+    lane_dtype: str = "int16"   # packed lane for the inference kernel
+    n_pack: int = 2
+    kv_bits: int = 0            # 0 = bf16 KV cache; 8 = int8 + bf16 scales
+    # Which projections to quantize.  Attention/S SM einsums always stay fp.
+    quantize_lm_head: bool = False
+
+    @property
+    def qmax_w(self) -> int:
+        return (1 << self.w_bits) - 1
+
+    @property
+    def qmax_a(self) -> int:
+        return (1 << self.a_bits) - 1
+
+    @property
+    def w_zero_point(self) -> int:
+        return 1 << (self.w_bits - 1)
+
+
+# ---------------------------------------------------------------------------
+# Affine lattice ops
+# ---------------------------------------------------------------------------
+
+def quantize_affine(x, scale, zero_point, bits):
+    qmax = (1 << bits) - 1
+    q = jnp.round(x / scale) + zero_point
+    return jnp.clip(q, 0, qmax).astype(jnp.int32)
+
+
+def dequantize_affine(q, scale, zero_point):
+    return (q.astype(jnp.float32) - zero_point) * scale
+
+
+def calibrate_absmax(x, bits, symmetric=True):
+    """absmax scale; midpoint zero-point when symmetric (weights)."""
+    amax = jnp.max(jnp.abs(x))
+    amax = jnp.maximum(amax, 1e-8)
+    if symmetric:
+        zp = 1 << (bits - 1)
+        scale = amax / zp
+    else:
+        zp = 0
+        scale = amax / ((1 << bits) - 1)
+    return scale, zp
+
+
+def calibrate_minmax(x, bits):
+    """Asymmetric min/max calibration (activations with negative support)."""
+    lo = jnp.minimum(jnp.min(x), 0.0)
+    hi = jnp.maximum(jnp.max(x), 1e-8)
+    qmax = (1 << bits) - 1
+    scale = (hi - lo) / qmax
+    zp = jnp.clip(jnp.round(-lo / scale), 0, qmax)
+    return scale, zp
+
+
+def sawb_scale(w, bits):
+    """SAWB statistical scale from E|w|, sqrt(E w^2) (paper ref [3]).
+
+    Coefficients regressed in the SAWB paper for 2..8 bits; outside that we
+    fall back to absmax.
+    """
+    coeffs = {2: (3.12, -2.064), 3: (7.509, -6.892), 4: (12.68, -12.80),
+              5: (17.74, -18.64), 6: (22.80, -24.48), 7: (27.86, -30.32),
+              8: (32.92, -36.16)}
+    if bits not in coeffs:
+        return calibrate_absmax(w, bits, symmetric=True)[0]
+    c1, c2 = coeffs[bits]
+    e1 = jnp.mean(jnp.abs(w))
+    e2 = jnp.sqrt(jnp.mean(w * w))
+    alpha = c1 * e2 + c2 * e1            # clip range
+    zp = 1 << (bits - 1)
+    return jnp.maximum(alpha, 1e-8) / zp
+
+
+# ---------------------------------------------------------------------------
+# Fake-quant with straight-through estimators (QAT forward path)
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fake_quant(x, scale, zero_point, bits):
+    q = quantize_affine(x, scale, zero_point, bits)
+    return dequantize_affine(q, scale, zero_point)
+
+
+def _fq_fwd(x, scale, zero_point, bits):
+    y = fake_quant(x, scale, zero_point, bits)
+    return y, (x, scale, zero_point)
+
+
+def _fq_bwd(bits, res, g):
+    x, scale, zp = res
+    qmax = (1 << bits) - 1
+    lo = (0 - zp) * scale
+    hi = (qmax - zp) * scale
+    in_range = (x >= lo) & (x <= hi)
+    dx = jnp.where(in_range, g, 0.0)
+    # scale/zp treated as calibration constants here (no grad); LSQ below
+    # provides the learned-scale path.
+    return dx, jnp.zeros_like(scale), jnp.zeros_like(zp)
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def lsq_fake_quant(x, step, bits, signed_midpoint):
+    """LSQ fake-quant: learned step size with the LSQ gradient.
+
+    signed_midpoint=True places the zero-point at 2^(bits-1) (weights);
+    False uses z=0 (non-negative activations).
+    """
+    zp = (1 << (bits - 1)) if signed_midpoint else 0
+    qmax = (1 << bits) - 1
+    v = x / step + zp
+    q = jnp.clip(jnp.round(v), 0, qmax)
+    return (q - zp) * step
+
+
+def _lsq_fwd(x, step, bits, signed_midpoint):
+    y = lsq_fake_quant(x, step, bits, signed_midpoint)
+    return y, (x, step)
+
+
+def _lsq_bwd(bits, signed_midpoint, res, g):
+    x, step = res
+    zp = (1 << (bits - 1)) if signed_midpoint else 0
+    qmax = (1 << bits) - 1
+    v = x / step + zp
+    q = jnp.round(v)
+    below, above = v < 0, v > qmax
+    mid = ~(below | above)
+    dx = jnp.where(mid, g, 0.0)
+    # d(out)/d(step): (q - zp) - (v - zp) inside the range; clip values at
+    # the rails contribute (rail - zp).
+    dstep_elem = jnp.where(
+        mid, (q - v),
+        jnp.where(below, (0 - zp), (qmax - zp)).astype(x.dtype))
+    # LSQ gradient scale: 1/sqrt(numel * qmax) stabilizes step learning.
+    gscale = 1.0 / jnp.sqrt(jnp.asarray(x.size, jnp.float32) * qmax)
+    dstep = jnp.sum((g * dstep_elem).astype(jnp.float32)) * gscale
+    return dx, jnp.reshape(dstep, jnp.shape(step)).astype(step.dtype)
+
+
+lsq_fake_quant.defvjp(_lsq_fwd, _lsq_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def pact_clip(x, alpha, bits):
+    """PACT: learnable upper clip for non-negative activations."""
+    del bits
+    return jnp.clip(x, 0.0, alpha)
+
+
+def _pact_fwd(x, alpha, bits):
+    return pact_clip(x, alpha, bits), (x, alpha)
+
+
+def _pact_bwd(bits, res, g):
+    del bits
+    x, alpha = res
+    dx = jnp.where((x > 0) & (x < alpha), g, 0.0)
+    dalpha = jnp.sum(jnp.where(x >= alpha, g, 0.0))
+    return dx, jnp.reshape(dalpha, jnp.shape(alpha))
+
+
+pact_clip.defvjp(_pact_fwd, _pact_bwd)
+
+
+def init_step_from_data(x, bits, signed_midpoint):
+    """LSQ init: 2*E|x| / sqrt(qmax) (Esser et al. §3)."""
+    qmax = (1 << bits) - 1
+    denom = jnp.sqrt(jnp.asarray(float(qmax)))
+    zp_span = (1 << (bits - 1)) if signed_midpoint else qmax
+    del zp_span
+    return jnp.maximum(2.0 * jnp.mean(jnp.abs(x)) / denom, 1e-6)

@@ -1,0 +1,107 @@
+"""ISA-level emulation of Sparq's ``vmacsr`` instruction (paper §IV-A).
+
+    vmacsr:  Vd <- Vd + ((Vs1 * Vs2) >> M)
+
+These functions mirror the *hardware lane semantics* (fixed-width wraparound,
+shift applied to the full-width SIMD product before accumulation) and exist
+for three purposes:
+  1. documentation-by-code of the instruction we are adapting,
+  2. an instruction-count model used by benchmarks/fig4 (how many vector
+     instructions each conv2d variant issues on Ara vs Sparq),
+  3. unit tests tying the TPU kernel's per-tile extraction to the per-MAC
+     semantics (they agree on the overflow-free region).
+
+The *performance* realization on TPU is NOT this function — it is the fused
+Pallas kernel (kernels/ulppack_matmul.py) whose epilogue plays the role of the
+shifter; see DESIGN.md §2.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+_WIDE = {jnp.int8.dtype: jnp.int16, jnp.int16.dtype: jnp.int32,
+         jnp.int32.dtype: jnp.int64}
+
+
+def vmacc(vd, vs1, vs2):
+    """RVV vmacc: vd += vs1*vs2, modulo lane width (low bits kept)."""
+    lane = vd.dtype
+    return (vd + vs1.astype(lane) * vs2.astype(lane)).astype(lane)
+
+
+def vmacsr(vd, vs1, vs2, shift):
+    """Sparq vmacsr: vd += (full-width(vs1*vs2) >> shift), modulo lane width.
+
+    The SIMD multiplier internally produces the double-width product; the
+    shifter (Fig. 2) sits between the multiplier and the accumulator, so the
+    shift sees the FULL product — this is what kills the low cross-term before
+    it can ever accumulate.
+    """
+    lane = jnp.dtype(vd.dtype)
+    wide = _WIDE[lane]
+    prod = vs1.astype(wide) * vs2.astype(wide)
+    return (vd.astype(wide) + (prod >> shift)).astype(lane)
+
+
+def vsrl(v, shift):
+    """Logical shift right on unsigned-interpreted lanes."""
+    lane = jnp.dtype(v.dtype)
+    bits = lane.itemsize * 8
+    mask = (1 << bits) - 1
+    wide = _WIDE[lane]
+    u = v.astype(wide) & mask
+    return (u >> shift).astype(lane)
+
+
+def vand(v, imm):
+    return v & jnp.asarray(imm, v.dtype)
+
+
+def vadd(a, b):
+    return (a + b).astype(a.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Instruction-count model (benchmarks/fig4): vector instructions per output
+# tile of a packed dot product of K channels.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class InstructionCount:
+    macs: int          # vmacc / vmacsr issues
+    shifts: int        # standalone vsrl issues
+    masks: int         # vand issues
+    adds: int          # vadd issues (wide accumulate after extraction)
+
+    @property
+    def total(self) -> int:
+        return self.macs + self.shifts + self.masks + self.adds
+
+
+def native_ulppack_instruction_count(k_channels: int, k_tile: int,
+                                     n_pack: int = 2) -> InstructionCount:
+    """Stock-Ara ULPPACK: vmacc per packed lane + extract every k_tile lanes."""
+    lanes = -(-k_channels // n_pack)
+    k_tile = max(k_tile, 1)
+    extractions = -(-lanes // k_tile)
+    return InstructionCount(macs=lanes, shifts=extractions,
+                            masks=extractions, adds=extractions)
+
+
+def vmacsr_instruction_count(k_channels: int, k_tile: int,
+                             n_pack: int = 2) -> InstructionCount:
+    """Sparq: vmacsr per packed lane; extraction collapses to a mask+add only
+    at accumulator spill points (the fused shift removed the vsrl), and the
+    relaxed constraint (no L-carry) doubles the spill distance."""
+    lanes = -(-k_channels // n_pack)
+    k_tile = max(2 * k_tile, 1)
+    spills = -(-lanes // k_tile)
+    return InstructionCount(macs=lanes, shifts=0, masks=spills, adds=spills)
+
+
+def int16_instruction_count(k_channels: int) -> InstructionCount:
+    """Baseline int16 dot product: one widening MAC per channel."""
+    return InstructionCount(macs=k_channels, shifts=0, masks=0, adds=0)

@@ -1,0 +1,214 @@
+"""Public kernel API: backend-dispatched packed ops + affine-corrected linear.
+
+``backend``:
+  'pallas'  — the fused TPU kernels (interpret=True on CPU): the Sparq path.
+  'xla'     — pure-XLA packed math (packing.packed_matmul_reference): the
+              "native ULPPACK on stock hardware" path, also used inside jitted
+              multi-device step functions where a python-gridded interpret
+              kernel would be prohibitively slow on CPU.
+  'auto'    — pallas on TPU, xla elsewhere.
+
+Both backends are bit-exact against kernels/ref.py oracles; tests enforce it.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing
+from repro.core.packing import PackSpec
+from repro.kernels import quant_pack as _quant_pack
+from repro.kernels import ulppack_conv2d as _conv
+from repro.kernels import ulppack_matmul as _matmul
+
+
+def _resolve(backend: str) -> str:
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    return backend
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def packed_matmul(a_packed, w_packed, spec: PackSpec, *,
+                  backend: str = "auto") -> jax.Array:
+    """[.., Kp] x [Kp, N] -> exact s32 dot of the underlying lattices."""
+    backend = _resolve(backend)
+    lead = a_packed.shape[:-1]
+    a2 = a_packed.reshape(-1, a_packed.shape[-1])
+    if backend == "pallas":
+        out = _matmul.ulppack_matmul(a2, w_packed, spec,
+                                     interpret=_interpret())
+    else:
+        out = _xla_packed_matmul(a2, w_packed, spec)
+    return out.reshape(*lead, w_packed.shape[-1])
+
+
+def _xla_packed_matmul(a_packed, w_packed, spec: PackSpec,
+                       batched_rows: int = 1024):
+    """Packed matmul on pre-packed lanes at the XLA level (tiled extraction).
+
+    Two formulations, chosen by row count:
+      * rows <= batched_rows (decode/serve): ONE batched dot_general over all
+        k-tiles + extraction + tile-sum.  Scan-free, so compiled FLOP counts
+        are exact for the roofline analysis (XLA cost analysis does not
+        multiply while-loop bodies by trip count).
+      * large rows (training-scale fallback): lax.scan over k-tiles — same
+        math as packing.packed_matmul_reference.
+    """
+    kt = spec.k_tile
+    a = packing.pad_to_multiple(a_packed, -1, kt)
+    w = packing.pad_to_multiple(w_packed, 0, kt)
+    n_tiles = a.shape[-1] // kt
+    rows = int(np.prod(a_packed.shape[:-1])) if a_packed.ndim > 1 else 1
+
+    if rows <= batched_rows:
+        a3 = a.reshape(*a.shape[:-1], n_tiles, kt)        # [.., nc, kt]
+        w3 = w.reshape(n_tiles, kt, w.shape[-1])          # [nc, kt, N]
+        nd = a3.ndim
+        tot = jax.lax.dot_general(
+            a3, w3, (((nd - 1,), (1,)), ((nd - 2,), (0,))),
+            preferred_element_type=jnp.int32)             # [nc, .., N]
+        return jnp.sum(packing.extract_dot(tot, spec), axis=0)
+
+    a_t = jnp.moveaxis(a.reshape(*a.shape[:-1], n_tiles, kt), -2, 0)
+    w_t = w.reshape(n_tiles, kt, w.shape[-1])
+
+    def body(carry, xs):
+        a_c, w_c = xs
+        tot = jax.lax.dot_general(a_c, w_c, (((a_c.ndim - 1,), (0,)),
+                                             ((), ())),
+                                  preferred_element_type=jnp.int32)
+        return carry + packing.extract_dot(tot, spec), None
+
+    init = jnp.zeros((*a_packed.shape[:-1], w_packed.shape[-1]), jnp.int32)
+    out, _ = jax.lax.scan(body, init, (a_t, w_t))
+    return out
+
+
+def quantize_pack(x, scale, zero_point, spec: PackSpec, *,
+                  backend: str = "auto"):
+    """Quantize + P1-pack activations along the last axis; also row sums."""
+    backend = _resolve(backend)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if backend == "pallas":
+        packed, rs = _quant_pack.quantize_pack(x2, scale, zero_point, spec,
+                                               interpret=_interpret())
+    else:
+        from repro.core import quant
+        q = quant.quantize_affine(x2, scale, zero_point, spec.a_bits)
+        packed = packing.pack_activations(q, spec, axis=-1)
+        rs = jnp.sum(q, axis=-1, keepdims=True).astype(jnp.int32)
+    kp = packed.shape[-1]
+    return packed.reshape(*lead, kp), rs.reshape(*lead, 1)
+
+
+def packed_conv2d(x_packed, w_packed, spec: PackSpec, *,
+                  padding: str = "SAME", backend: str = "auto"):
+    backend = _resolve(backend)
+    if backend == "pallas":
+        return _conv.ulppack_conv2d(x_packed, w_packed, spec,
+                                    padding=padding, interpret=_interpret())
+    return _xla_packed_conv2d(x_packed, w_packed, spec, padding)
+
+
+def _xla_packed_conv2d(x_packed, w_packed, spec: PackSpec, padding):
+    """XLA packed conv: conv in packed space per k_tile chunk + extraction."""
+    kt = spec.k_tile
+    cp = x_packed.shape[-1]
+    out = None
+    for c0 in range(0, cp, kt):
+        c1 = min(c0 + kt, cp)
+        tot = jax.lax.conv_general_dilated(
+            x_packed[..., c0:c1].astype(jnp.int32),
+            w_packed[:, :, c0:c1, :].astype(jnp.int32),
+            (1, 1), padding, dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            preferred_element_type=jnp.int32)
+        d = packing.extract_dot(tot, spec)
+        out = d if out is None else out + d
+    return out
+
+
+def int_matmul(q_a, q_w, *, backend: str = "auto"):
+    backend = _resolve(backend)
+    lead = q_a.shape[:-1]
+    a2 = q_a.reshape(-1, q_a.shape[-1])
+    if backend == "pallas":
+        out = _matmul.int_matmul(a2, q_w, interpret=_interpret())
+    else:
+        out = jax.lax.dot_general(a2.astype(jnp.int32),
+                                  q_w.astype(jnp.int32),
+                                  (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.int32)
+    return out.reshape(*lead, q_w.shape[-1])
+
+
+def quantized_linear(x, w_packed, w_col_sums, a_scale, a_zp, w_scale, w_zp,
+                     spec: PackSpec, *, bias=None, backend: str = "auto",
+                     out_dtype=jnp.float32):
+    """The deployed Sparq linear: runtime pack + packed matmul + dequant.
+
+    x:          [..., K] float activations
+    w_packed:   [Kp, N] offline-packed weight lanes (field-reversed)
+    w_col_sums: [N] s32 offline per-column lattice sums
+    Returns float [..., N]  ==  quantized_linear_ref to float tolerance.
+    """
+    k = x.shape[-1]
+    a_packed, a_sums = quantize_pack(x, a_scale, a_zp, spec, backend=backend)
+    acc = packed_matmul(a_packed, w_packed, spec, backend=backend)
+    acc = acc.astype(jnp.float32)
+    corr = (acc
+            - jnp.asarray(w_zp, jnp.float32) * a_sums.astype(jnp.float32)
+            - jnp.asarray(a_zp, jnp.float32)
+            * w_col_sums.astype(jnp.float32)[None, :]
+            .reshape((1,) * (acc.ndim - 1) + (-1,))
+            + (k * jnp.asarray(a_zp, jnp.float32)
+               * jnp.asarray(w_zp, jnp.float32)))
+    out = (jnp.asarray(a_scale, jnp.float32)
+           * jnp.asarray(w_scale, jnp.float32) * corr)
+    if bias is not None:
+        out = out + bias
+    return out.astype(out_dtype)
+
+
+def prepare_weights(w, w_scale, w_zp, spec: PackSpec):
+    """Offline weight path: quantize, pack (field-reversed), column sums."""
+    from repro.core import quant
+    q_w = quant.quantize_affine(w, w_scale, w_zp, spec.w_bits)
+    packed = packing.pack_weights(q_w, spec, axis=0)
+    col_sums = jnp.sum(q_w, axis=0).astype(jnp.int32)
+    return packed, col_sums
+
+
+# ---------------------------------------------------------------------------
+# Dense sub-byte weight storage (beyond-paper, §Perf memory-term
+# optimization): store w_bits-wide lattice values bit-dense in int32 words
+# (true w_bits/value HBM footprint) and expand to P1 lanes at use.  On TPU
+# the expansion lives in the Pallas kernel's VMEM prologue; the XLA fallback
+# materializes the lanes (still saving HBM reads of the weight tensor).
+# ---------------------------------------------------------------------------
+
+def dense_store_weights(q_w: jax.Array, w_bits: int) -> jax.Array:
+    """[K, N] lattice (< 2^w_bits) -> [ceil(K/per), N] int32 bit-dense."""
+    per = 32 // w_bits
+    k, n = q_w.shape
+    q = packing.pad_to_multiple(q_w.astype(jnp.int32), 0, per)
+    q = q.reshape(-1, per, n)
+    word = jnp.zeros((q.shape[0], n), jnp.int32)
+    for j in range(per):
+        word = word | (q[:, j, :] << (w_bits * j))
+    return word
+
+
+def dense_load_weights(words: jax.Array, w_bits: int, k: int) -> jax.Array:
+    """Inverse of dense_store_weights -> [K, N] int32 lattice."""
+    per = 32 // w_bits
+    mask = (1 << w_bits) - 1
+    parts = [(words >> (w_bits * j)) & mask for j in range(per)]
+    q = jnp.stack(parts, axis=1).reshape(-1, words.shape[-1])
+    return q[:k]

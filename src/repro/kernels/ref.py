@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth for correctness tests (exact integer equality for
+the packed paths) and the reference FLOP baseline for benchmarks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core.packing import PackSpec
+
+
+def matmul_i32_ref(q_a: jax.Array, q_w: jax.Array) -> jax.Array:
+    """Exact integer matmul oracle: [M, K] x [K, N] -> s32."""
+    return jax.lax.dot_general(
+        q_a.astype(jnp.int32), q_w.astype(jnp.int32),
+        (((q_a.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
+def packed_matmul_ref(q_a: jax.Array, q_w: jax.Array, spec: PackSpec):
+    """Native-ULPPACK XLA path (pack + tile + extract); bit-exact target."""
+    return packing.packed_matmul_reference(q_a, q_w, spec)
+
+
+def conv2d_i32_ref(q_x: jax.Array, q_w: jax.Array, padding="VALID"):
+    """Exact integer conv2d oracle.
+
+    q_x: [N, H, W, C] lattice, q_w: [Fh, Fw, C, Cout] lattice -> s32 NHWC.
+    """
+    return jax.lax.conv_general_dilated(
+        q_x.astype(jnp.int32), q_w.astype(jnp.int32),
+        window_strides=(1, 1), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.int32)
+
+
+def quantize_pack_ref(x: jax.Array, scale, zero_point, spec: PackSpec):
+    """Oracle for the fused quantize+pack kernel.
+
+    Returns (packed lanes along last axis, per-row lattice sums for the
+    zero-point correction).
+    """
+    from repro.core import quant
+    q = quant.quantize_affine(x, scale, zero_point, spec.a_bits)
+    packed = packing.pack_activations(q, spec, axis=-1)
+    row_sums = jnp.sum(q, axis=-1).astype(jnp.int32)
+    return packed, row_sums
+
+
+def quantized_linear_ref(x, w, a_scale, a_zp, w_scale, w_zp, a_bits, w_bits):
+    """Float oracle of a fully affine-corrected quantized linear layer.
+
+    Quantizes x and w to their lattices, runs the exact integer matmul and
+    applies the affine correction (DESIGN.md §4).  The packed kernel path must
+    match this to float tolerance (and its integer core exactly).
+    """
+    from repro.core import quant
+    q_a = quant.quantize_affine(x, a_scale, a_zp, a_bits)
+    q_w = quant.quantize_affine(w, w_scale, w_zp, w_bits)
+    k = x.shape[-1]
+    acc = matmul_i32_ref(q_a, q_w).astype(jnp.float32)
+    a_sums = jnp.sum(q_a, axis=-1, keepdims=True).astype(jnp.float32)
+    w_sums = jnp.sum(q_w, axis=0, keepdims=True).astype(jnp.float32)
+    corrected = (acc - w_zp * a_sums - a_zp * w_sums + k * a_zp * w_zp)
+    return a_scale * w_scale * corrected

@@ -1,0 +1,141 @@
+"""Packed sub-byte conv2d Pallas kernel (paper §IV-B, Algorithm 1 on TPU).
+
+Output-stationary, channel-packed (ULPPACK P1 over the C axis), with the
+``vmacsr`` shift-extract fused after every packed MXU contraction.  The
+paper's ``vslidedown`` input reuse becomes VMEM-resident window slicing: the
+input slab for a batch element stays in VMEM and each (fh, fw) kernel tap is a
+shifted view — no im2col materialization in HBM, mirroring the paper's
+motivation for a dedicated conv algorithm (§III-A).
+
+Layouts: input NHWC (C packed -> Cp lanes), weights HWIO (I packed, field-
+reversed), output NHWC s32.  Padding is applied by the wrapper ('VALID'
+inside the kernel).  Grid: (N, Cout/bco); per grid step the full H x W slab is
+resident, sized for v5e VMEM at the paper's benchmark shapes (DESIGN.md §10).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.packing import PackSpec
+
+
+def _kernel(x_ref, w_ref, o_ref, *, spec: PackSpec, fh: int, fw: int,
+            out_h: int, out_w: int):
+    cp = x_ref.shape[-1]
+    bco = w_ref.shape[-1]
+    kt = spec.k_tile
+    band = spec.shift * (spec.n_pack - 1)
+    acc = jnp.zeros((out_h * out_w, bco), jnp.int32)
+    x = x_ref[0]                                   # [H, W, Cp]
+    for ih in range(fh):
+        for iw in range(fw):
+            window = jax.lax.slice(
+                x, (ih, iw, 0), (ih + out_h, iw + out_w, cp))
+            rows = window.reshape(out_h * out_w, cp)
+            for c0 in range(0, cp, kt):
+                c1 = min(c0 + kt, cp)
+                t = jax.lax.dot_general(
+                    rows[:, c0:c1], w_ref[ih, iw, c0:c1, :],
+                    (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.int32)
+                acc = acc + ((t >> band) & spec.field_mask)
+    o_ref[...] = acc.reshape(1, out_h, out_w, bco)
+
+
+def _int_kernel(x_ref, w_ref, o_ref, *, fh: int, fw: int, out_h: int,
+                out_w: int):
+    cin = x_ref.shape[-1]
+    bco = w_ref.shape[-1]
+    acc = jnp.zeros((out_h * out_w, bco), jnp.int32)
+    x = x_ref[0]
+    for ih in range(fh):
+        for iw in range(fw):
+            window = jax.lax.slice(
+                x, (ih, iw, 0), (ih + out_h, iw + out_w, cin))
+            rows = window.reshape(out_h * out_w, cin)
+            acc = acc + jax.lax.dot_general(
+                rows, w_ref[ih, iw], (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+    o_ref[...] = acc.reshape(1, out_h, out_w, bco)
+
+
+def _maybe_pad_spatial(q_x, fh, fw, padding):
+    if padding == "VALID":
+        return q_x
+    if padding == "SAME":
+        ph, pw = fh - 1, fw - 1
+        return jnp.pad(q_x, ((0, 0), (ph // 2, ph - ph // 2),
+                             (pw // 2, pw - pw // 2), (0, 0)))
+    raise ValueError(padding)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("spec", "block_co", "padding", "interpret"))
+def ulppack_conv2d(x_packed: jax.Array, w_packed: jax.Array, spec: PackSpec,
+                   *, block_co: int = 8, padding: str = "VALID",
+                   interpret: bool = True) -> jax.Array:
+    """Packed conv2d: [N,H,W,Cp] x [Fh,Fw,Cp,Co] -> s32 [N,Ho,Wo,Co]."""
+    if not spec.feasible:
+        raise ValueError(f"{spec} outside the overflow-free region")
+    n, _, _, cp = x_packed.shape
+    fh, fw, cp2, co = w_packed.shape
+    assert cp == cp2, (cp, cp2)
+    x_packed = _maybe_pad_spatial(x_packed, fh, fw, padding)
+    h, w = x_packed.shape[1], x_packed.shape[2]
+    out_h, out_w = h - fh + 1, w - fw + 1
+    rem = (-co) % block_co
+    if rem:
+        w_packed = jnp.pad(w_packed, ((0, 0),) * 3 + ((0, rem),))
+    gco = w_packed.shape[-1] // block_co
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, spec=spec, fh=fh, fw=fw,
+                          out_h=out_h, out_w=out_w),
+        grid=(n, gco),
+        in_specs=[
+            pl.BlockSpec((1, h, w, cp), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((fh, fw, cp, block_co), lambda i, j: (0, 0, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, out_h, out_w, block_co),
+                               lambda i, j: (i, 0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, out_h, out_w, w_packed.shape[-1]),
+                                       jnp.int32),
+        interpret=interpret,
+    )(x_packed, w_packed)
+    return out[..., :co]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_co", "padding", "interpret"))
+def int_conv2d(q_x: jax.Array, q_w: jax.Array, *, block_co: int = 8,
+               padding: str = "VALID", interpret: bool = True) -> jax.Array:
+    """Unpacked integer conv2d kernel (the paper's int16 baseline)."""
+    n = q_x.shape[0]
+    fh, fw, cin, co = q_w.shape
+    q_x = _maybe_pad_spatial(q_x, fh, fw, padding)
+    h, w = q_x.shape[1], q_x.shape[2]
+    out_h, out_w = h - fh + 1, w - fw + 1
+    rem = (-co) % block_co
+    if rem:
+        q_w = jnp.pad(q_w, ((0, 0),) * 3 + ((0, rem),))
+    gco = q_w.shape[-1] // block_co
+    out = pl.pallas_call(
+        functools.partial(_int_kernel, fh=fh, fw=fw, out_h=out_h,
+                          out_w=out_w),
+        grid=(n, gco),
+        in_specs=[
+            pl.BlockSpec((1, h, w, cin), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((fh, fw, cin, block_co), lambda i, j: (0, 0, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, out_h, out_w, block_co),
+                               lambda i, j: (i, 0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, out_h, out_w, q_w.shape[-1]),
+                                       jnp.int32),
+        interpret=interpret,
+    )(q_x, q_w)
+    return out[..., :co]

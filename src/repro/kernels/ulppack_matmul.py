@@ -1,0 +1,152 @@
+"""Fused ULPPACK matmul Pallas TPU kernel — the ``vmacsr`` analogue.
+
+The kernel computes  D[M, N] = sum_k dot-extract(a_packed[M, Kp], w_packed[Kp, N])
+where every K-block is processed as ``chunks`` sub-tiles of ``k_tile`` packed
+lanes: each sub-tile is one MXU contraction in packed space, immediately
+followed by the shift-mask extraction (VPU ops on VMEM-resident registers) and
+accumulation into a VMEM s32 accumulator.  This places Sparq's post-multiplier
+shifter at the MXU-tile boundary — the TPU-idiomatic fusion point (DESIGN.md
+§2) — and keeps the packed partials out of HBM entirely, unlike the native
+XLA path (packing.packed_matmul_reference) which round-trips an s32 partial
+per k_tile lanes.
+
+Block layout (output-stationary, matching the paper's Algorithm 1):
+  grid = (M/bm, N/bn, Kp/bk), k innermost; acc[bm, bn] s32 lives in VMEM
+  scratch across the k sweep; bk = chunks * k_tile lanes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.packing import PackSpec
+
+
+def _kernel(a_ref, w_ref, o_ref, acc_ref, *, spec: PackSpec, chunks: int,
+            k_tile: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]                       # [bm, bk] lane dtype
+    w = w_ref[...]                       # [bk, bn] lane dtype
+    bm, bk = a.shape
+    bn = w.shape[1]
+    # [bm, chunks, k_tile] x [chunks, k_tile, bn] -> [chunks, bm, bn] packed
+    # totals, one batched MXU contraction per K-block.
+    a3 = a.reshape(bm, chunks, k_tile)
+    w3 = w.reshape(chunks, k_tile, bn)
+    totals = jax.lax.dot_general(
+        a3, w3, (((2,), (1,)), ((1,), (0,))),
+        preferred_element_type=jnp.int32)
+    # vmacsr epilogue: shift to the D band, mask, accumulate wide.
+    band = spec.shift * (spec.n_pack - 1)
+    d = (totals >> band) & spec.field_mask
+    acc_ref[...] += jnp.sum(d, axis=0)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _done():
+        o_ref[...] = acc_ref[...]
+
+
+def _pad_axis(x, axis, multiple):
+    rem = (-x.shape[axis]) % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("spec", "block_m", "block_n", "chunks", "interpret"))
+def ulppack_matmul(a_packed: jax.Array, w_packed: jax.Array, spec: PackSpec,
+                   *, block_m: int = 128, block_n: int = 128,
+                   chunks: int = 8, interpret: bool = True) -> jax.Array:
+    """Packed-lane matmul: [M, Kp] x [Kp, N] -> s32 [M, N] exact dot values.
+
+    ``interpret=True`` validates the kernel body on CPU; on TPU pass False.
+    VMEM working set per step ~= bm*bk + bk*bn lanes + (chunks+1)*bm*bn s32;
+    defaults stay under 2 MiB for int16 lanes with chunks<=8.
+    """
+    if not spec.feasible:
+        raise ValueError(f"{spec} outside the overflow-free region")
+    if a_packed.dtype != spec.lane_dtype or w_packed.dtype != spec.lane_dtype:
+        raise TypeError("operands must already be packed to spec.lane_dtype")
+    m, kp = a_packed.shape
+    kp2, n = w_packed.shape
+    assert kp == kp2, (kp, kp2)
+    k_tile = spec.k_tile
+    block_k = chunks * k_tile
+
+    a_p = _pad_axis(_pad_axis(a_packed, 0, block_m), 1, block_k)
+    w_p = _pad_axis(_pad_axis(w_packed, 0, block_k), 1, block_n)
+    gm = a_p.shape[0] // block_m
+    gk = a_p.shape[1] // block_k
+    gn = w_p.shape[1] // block_n
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, spec=spec, chunks=chunks, k_tile=k_tile),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((a_p.shape[0], w_p.shape[1]),
+                                       jnp.int32),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+        interpret=interpret,
+    )(a_p, w_p)
+    return out[:m, :n]
+
+
+def _int_kernel(a_ref, w_ref, o_ref, acc_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _done():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "interpret"))
+def int_matmul(q_a: jax.Array, q_w: jax.Array, *, block_m: int = 128,
+               block_n: int = 128, block_k: int = 512,
+               interpret: bool = True) -> jax.Array:
+    """Unpacked integer matmul kernel (s8/s16 -> s32).
+
+    Baseline kernel: the paper's int16 conv2d counterpart and the W8A8 / out-
+    of-region fallback path on TPU.
+    """
+    m, k = q_a.shape
+    _, n = q_w.shape
+    a_p = _pad_axis(_pad_axis(q_a, 0, block_m), 1, block_k)
+    w_p = _pad_axis(_pad_axis(q_w, 0, block_k), 1, block_n)
+    out = pl.pallas_call(
+        _int_kernel,
+        grid=(a_p.shape[0] // block_m, w_p.shape[1] // block_n,
+              a_p.shape[1] // block_k),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((a_p.shape[0], w_p.shape[1]),
+                                       jnp.int32),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+        interpret=interpret,
+    )(a_p, w_p)
+    return out[:m, :n]

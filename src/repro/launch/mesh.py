@@ -1,0 +1,24 @@
+"""Production mesh definition (assignment-mandated shapes).
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod; multi-pod adds a leading 2-pod axis (512)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over the real host devices (tests / examples)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = min(model, max(1, n // data))
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,50 @@
+"""CLI server: pack a model for deployment and serve synthetic requests.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
+        --reduced --requests 4
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.models import lm
+from repro.serve.engine import Request, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.ALL_NAMES)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--max-new-tokens", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=2)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--no-packed", action="store_true")
+    args = ap.parse_args()
+
+    cfg = configs.get_config(args.arch, reduced=args.reduced)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(cfg, params, max_batch=args.max_batch,
+                        max_len=args.max_len, packed=not args.no_packed)
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        eng.submit(Request(
+            uid=i, prompt=rng.integers(0, cfg.vocab_size, 6).astype(
+                np.int32),
+            max_new_tokens=args.max_new_tokens))
+    t0 = time.time()
+    done = eng.run_to_completion()
+    dt = time.time() - t0
+    toks = sum(len(r.output) for r in done)
+    print(f"{len(done)} requests, {toks} tokens, {dt:.1f}s "
+          f"({toks/dt:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

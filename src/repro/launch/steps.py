@@ -1,0 +1,148 @@
+"""Step factories: train_step / prefill_step / decode_step.
+
+These are the functions the dry-run lowers and the trainer/server jit.
+Quantization modes per step kind (DESIGN.md §2, §5):
+  train   -> 'qat'    (LSQ fake-quant, STE grads)
+  prefill -> 'qat'    (compute-bound; on TPU the fused Pallas kernel serves
+                       this role — the CPU-lowered dry-run uses fake-quant)
+  decode  -> 'packed' (the deployed Sparq integer path; scan-free batched
+                       packed dots so roofline FLOPs are exact)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.optim import adamw, schedules
+
+
+def quant_mode_for(cfg, kind: str) -> str:
+    if not cfg.quant.enabled:
+        return "none"
+    return {"train": "qat", "prefill": "qat", "decode": "packed"}[kind]
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg, *, adamw_cfg: adamw.AdamWConfig | None = None,
+                    schedule: str = "cosine", peak_lr: float = 3e-4,
+                    warmup_steps: int = 100, total_steps: int = 10_000,
+                    clip_norm: float = 1.0, compress_grads: bool = False):
+    adamw_cfg = adamw_cfg or adamw.AdamWConfig(
+        eightbit_moments=cfg.parallel.eightbit_moments)
+    sched = schedules.get_schedule(schedule)
+    qmode = quant_mode_for(cfg, "train")
+    remat = cfg.parallel.remat != "none"
+    n_micro = max(1, cfg.parallel.microbatches)
+
+    def loss_of(params, mb):
+        logits, aux, _ = lm.forward(params, cfg, mb, quant_mode=qmode,
+                                    remat=remat)
+        loss, ce = lm.loss_fn(logits, mb["labels"], aux)
+        return loss, ce
+
+    grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+
+    def split_micro(batch):
+        def sp(x):
+            if x.ndim >= 2 and x.shape[0] == 3:      # positions3 [3,B,S]
+                return jnp.moveaxis(
+                    x.reshape(3, n_micro, x.shape[1] // n_micro,
+                              *x.shape[2:]), 1, 0)
+            return x.reshape(n_micro, x.shape[0] // n_micro, *x.shape[1:])
+        return jax.tree.map(sp, batch)
+
+    def train_step(state, batch):
+        params, opt_state, step = (state["params"], state["opt_state"],
+                                   state["step"])
+        lr = sched(step, peak_lr=peak_lr, warmup_steps=warmup_steps,
+                   total_steps=total_steps)
+
+        if n_micro == 1:
+            (loss, ce), grads = grad_fn(params, batch)
+        else:
+            micro = split_micro(batch)
+
+            from repro.parallel.sharding import constrain_like_params
+
+            def body(acc, mb):
+                (l, c), g = grad_fn(params, mb)
+                g_acc, l_acc, c_acc = acc
+                g_new = constrain_like_params(
+                    jax.tree.map(jnp.add, g_acc, g), cfg)
+                return (g_new, l_acc + l, c_acc + c), None
+
+            zeros = constrain_like_params(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params), cfg)
+            (grads, loss, ce), _ = jax.lax.scan(
+                body, (zeros, 0.0, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss, ce = loss / n_micro, ce / n_micro
+
+        if compress_grads:
+            from repro.parallel import collectives
+            grads, state = collectives.compress_grads_with_feedback(
+                grads, state)
+
+        grads, gnorm = adamw.clip_by_global_norm(grads, clip_norm)
+        updates, opt_state = adamw.update(grads, opt_state, params, lr,
+                                          adamw_cfg)
+        params = adamw.apply_updates(params, updates)
+        new_state = dict(state)
+        new_state.update(params=params, opt_state=opt_state, step=step + 1)
+        metrics = {"loss": loss, "ce": ce, "grad_norm": gnorm, "lr": lr}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_train_state(params, adamw_cfg: adamw.AdamWConfig | None = None,
+                     error_feedback: bool = False, cfg=None):
+    if adamw_cfg is None:
+        adamw_cfg = adamw.AdamWConfig(
+            eightbit_moments=cfg.parallel.eightbit_moments if cfg is not None
+            else False)
+    state = {"params": params,
+             "opt_state": adamw.init(params, adamw_cfg),
+             "step": jnp.zeros((), jnp.int32)}
+    if error_feedback:
+        state["error_feedback"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return state
+
+
+# ---------------------------------------------------------------------------
+# Serve
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg, max_len: int):
+    qmode = quant_mode_for(cfg, "prefill")
+
+    def prefill_step(params, batch):
+        from repro.models import common as _c
+        b = batch["tokens"].shape[0]
+        caches = lm.init_caches(cfg, b, max_len,
+                                dtype=_c.dtype_of(cfg.compute_dtype))
+        logits, _, caches = lm.forward(params, cfg, batch,
+                                       quant_mode=qmode, caches=caches)
+        return logits[:, -1], caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg):
+    qmode = quant_mode_for(cfg, "decode")
+
+    def decode_step(params, caches, batch, index):
+        b = batch["tokens"].shape[0]
+        dec = dict(batch)
+        dec["positions"] = jnp.full((b, 1), index, jnp.int32)
+        logits, _, caches = lm.forward(params, cfg, dec, quant_mode=qmode,
+                                       caches=caches, cache_index=index)
+        return logits[:, -1], caches
+
+    return decode_step

@@ -1,0 +1,52 @@
+"""CLI trainer: --arch <id> [--reduced] with the fault-tolerant loop.
+
+    PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b \
+        --reduced --steps 100 --ckpt-dir /tmp/ckpt
+
+Full configs on real hardware would add --mesh data,model sizing; on this CPU
+container the reduced configs exercise the identical code path end-to-end.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro import configs
+from repro.data.pipeline import DataConfig
+from repro.train.loop import TrainLoopConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.ALL_NAMES)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--schedule", default=None,
+                    help="cosine|wsd (default: wsd for minicpm, else cosine)")
+    args = ap.parse_args()
+
+    cfg = configs.get_config(args.arch, reduced=args.reduced)
+    if cfg.family == "cnn":
+        raise SystemExit("use examples/train_cnn_qat.py for sparq-cnn")
+    schedule = args.schedule or (
+        "wsd" if args.arch == "minicpm-2b" else "cosine")
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                          global_batch=args.batch)
+    loop = TrainLoopConfig(total_steps=args.steps,
+                           checkpoint_every=args.ckpt_every,
+                           checkpoint_dir=args.ckpt_dir)
+    trainer = Trainer(cfg, loop, data_cfg,
+                      train_step_kwargs={"peak_lr": args.lr,
+                                         "schedule": schedule,
+                                         "total_steps": args.steps})
+    trainer.install_preemption_handler()
+    trainer.run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,268 @@
+"""Attention: GQA / MQA, sliding-window (ring-buffer KV), M-RoPE, cross-attn,
+query-chunked exact softmax (flash-style memory behaviour in pure JAX).
+
+Projections are quantizable Dense layers (the paper's technique applies to
+them); the score/value einsums stay bf16 (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import dense_apply, dense_init
+
+NEG_INF = -1e30
+
+
+def attention_init(key, cfg, *, cross=False, dtype=jnp.float32):
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    q = dense_init(ks[0], cfg.d_model, cfg.num_heads * hd,
+                   use_bias=cfg.qkv_bias, dtype=dtype,
+                   quantized=True, qcfg=cfg.quant)
+    k = dense_init(ks[1], cfg.d_model, cfg.num_kv_heads * hd,
+                   use_bias=cfg.qkv_bias, dtype=dtype,
+                   quantized=True, qcfg=cfg.quant)
+    v = dense_init(ks[2], cfg.d_model, cfg.num_kv_heads * hd,
+                   use_bias=cfg.qkv_bias, dtype=dtype,
+                   quantized=True, qcfg=cfg.quant)
+    o = dense_init(ks[3], cfg.num_heads * hd, cfg.d_model, dtype=dtype,
+                   quantized=True, qcfg=cfg.quant,
+                   scale=1.0 / (cfg.num_heads * hd) ** 0.5)
+    p = {"q": q, "k": k, "v": v, "o": o}
+    del cross
+    return p
+
+
+def init_kv_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
+    """Ring-buffer KV cache; SWA archs allocate only the window.
+
+    With cfg.quant.kv_bits == 8 the cache stores int8 values + per-(pos,
+    head) bf16 absmax scales — halving the dominant HBM-read term of long-
+    context decode (§Perf, beyond-paper: the paper's quantization theme
+    applied to the cache, not just the weights).
+    """
+    hd = cfg.resolved_head_dim
+    size = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    kvh = cfg.num_kv_heads
+    if getattr(cfg.quant, "kv_bits", 0) == 8:
+        return {
+            "k": jnp.zeros((batch, size, kvh, hd), jnp.int8),
+            "v": jnp.zeros((batch, size, kvh, hd), jnp.int8),
+            "k_scale": jnp.zeros((batch, size, kvh), jnp.bfloat16),
+            "v_scale": jnp.zeros((batch, size, kvh), jnp.bfloat16),
+        }
+    return {
+        "k": jnp.zeros((batch, size, kvh, hd), dtype),
+        "v": jnp.zeros((batch, size, kvh, hd), dtype),
+    }
+
+
+def _kv_quantize(x):
+    """[B,S,KVH,hd] float -> (int8 lattice, bf16 per-(pos,head) scales)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def _kv_dequantize(q, scale, dtype=jnp.float32):
+    # compute in the target dtype: int8 values are exact in bf16, and f32
+    # intermediates here would double the dominant decode traffic (§Perf C)
+    return q.astype(dtype) * scale.astype(dtype)[..., None]
+
+
+def _chunked_attention(q, k, v, mask_fn, q_positions, chunk: int):
+    """Exact softmax attention, q-chunked to bound the score buffer.
+
+    q: [B, Sq, H, hd]; k/v: [B, Sk, KVH, hd]; mask_fn(qpos[chunk]) ->
+    [B, chunk, Sk] boolean validity.  Returns [B, Sq, H, hd].
+    """
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    groups = h // kvh
+    scale = hd ** -0.5
+    # operands stay in their storage dtype (bf16 on TPU) with f32 MXU
+    # accumulation — avoids materializing f32 copies of the whole KV cache
+    # (§Perf cell-C iteration 2: the f32 upcast was 2x the cache traffic)
+    opd = q.dtype
+
+    def one_chunk(qc, qpos):
+        # qc: [B, C, H, hd]
+        qg = (qc.astype(jnp.float32) * scale).astype(opd)
+        qg = qg.reshape(b, qc.shape[1], kvh, groups, hd)
+        scores = jnp.einsum("bckgd,bskd->bckgs", qg, k.astype(opd),
+                            preferred_element_type=jnp.float32)
+        valid = mask_fn(qpos)[:, :, None, None, :]        # [B,C,1,1,Sk]
+        scores = jnp.where(valid, scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bckgs,bskd->bckgd", probs.astype(opd),
+                         v.astype(opd),
+                         preferred_element_type=jnp.float32)
+        return out.reshape(b, qc.shape[1], h, hd)
+
+    if sq <= chunk:
+        return one_chunk(q, q_positions).astype(q.dtype)
+    # per-chunk remat: backward recomputes the [C, Sk] score block instead of
+    # storing scores+probs for every chunk (flash-style memory behaviour)
+    chunk_fn = jax.checkpoint(lambda args: one_chunk(*args))
+    n = sq // chunk
+    rem = sq - n * chunk
+    qs = jnp.moveaxis(
+        q[:, :n * chunk].reshape(b, n, chunk, h, hd), 1, 0)
+    ps = jnp.moveaxis(
+        q_positions[:, :n * chunk].reshape(b, n, chunk), 1, 0)
+    outs = jax.lax.map(chunk_fn, (qs, ps))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, n * chunk, h, hd)
+    if rem:
+        tail = one_chunk(q[:, n * chunk:], q_positions[:, n * chunk:])
+        out = jnp.concatenate([out, tail], axis=1)
+    return out.astype(q.dtype)
+
+
+def precompute_cross_kv(p, cfg, enc_out, *, quant_mode="none"):
+    """Project encoder states to K/V once (reused every decode step)."""
+    b = enc_out.shape[0]
+    hd = cfg.resolved_head_dim
+    cd = common.dtype_of(cfg.compute_dtype)
+    qm = dict(qcfg=cfg.quant, quant_mode=quant_mode, compute_dtype=cd)
+    k = dense_apply(p["k"], enc_out, **qm).reshape(b, -1, cfg.num_kv_heads,
+                                                   hd)
+    v = dense_apply(p["v"], enc_out, **qm).reshape(b, -1, cfg.num_kv_heads,
+                                                   hd)
+    return k, v
+
+
+def attention_apply(p, cfg, x, *, positions, quant_mode="none",
+                    cache=None, cache_index=None, kv_x=None,
+                    kv_positions=None, causal=True, positions3=None,
+                    q_chunk=512, cross_kv=None):
+    """Full attention forward.
+
+    Modes:
+      * training/prefill: cache=None (or cache provided to be FILLED when
+        cache_index is None -> returns (out, new_cache)).
+      * decode: cache + cache_index given, x is [B, 1, d].
+      * cross-attention: kv_x (encoder states) given; non-causal, no RoPE
+        ring-buffer concerns.
+    """
+    b, sq, _ = x.shape
+    hd = cfg.resolved_head_dim
+    cd = common.dtype_of(cfg.compute_dtype)
+    qm = dict(qcfg=cfg.quant, quant_mode=quant_mode, compute_dtype=cd)
+
+    q = dense_apply(p["q"], x, **qm).reshape(b, sq, cfg.num_heads, hd)
+    if cross_kv is not None:
+        k, v = cross_kv
+        kv_x = True  # marks cross-attention masking below
+    else:
+        kv_in = kv_x if kv_x is not None else x
+        k = dense_apply(p["k"], kv_in, **qm).reshape(b, -1,
+                                                     cfg.num_kv_heads, hd)
+        v = dense_apply(p["v"], kv_in, **qm).reshape(b, -1,
+                                                     cfg.num_kv_heads, hd)
+
+    if kv_x is None:  # self-attention: rotate q and k
+        if cfg.mrope and positions3 is not None:
+            q = common.apply_mrope(q, positions3, cfg.mrope_sections,
+                                   cfg.rope_theta)
+            k = common.apply_mrope(k, positions3, cfg.mrope_sections,
+                                   cfg.rope_theta)
+        else:
+            q = common.apply_rope(q, positions, cfg.rope_theta)
+            k = common.apply_rope(k, positions, cfg.rope_theta)
+
+    window = cfg.sliding_window
+    new_cache = None
+
+    if cache is not None and cache_index is not None:
+        # ---- decode: write new k/v into the ring buffer ----
+        size = cache["k"].shape[1]
+        slot = cache_index % size if window else cache_index
+        new_cache = _cache_write(cache, k, v, slot)
+        k, v = _cache_read(new_cache, k.dtype)
+        kv_pos = _ring_positions(cache_index, size, window)
+
+        def mask_fn(qpos):
+            m = (kv_pos[None, None, :] <= qpos[:, :, None])
+            m &= kv_pos[None, None, :] >= 0
+            if window:
+                m &= (qpos[:, :, None] - kv_pos[None, None, :]) < window
+            return m
+    else:
+        # ---- training / prefill ----
+        if cache is not None:  # prefill fills the cache
+            size = cache["k"].shape[1]
+            if window and sq > size:
+                # ring layout: slot = pos % size for the last `size` tokens
+                roll = (sq % size)
+                new_cache = _cache_write(cache, k[:, -size:], v[:, -size:],
+                                         0)
+                new_cache = {kk: jnp.roll(vv, roll, axis=1)
+                             for kk, vv in new_cache.items()}
+            else:
+                new_cache = _cache_write(cache, k, v, 0)
+        if kv_x is not None:
+            kv_pos = (kv_positions if kv_positions is not None
+                      else jnp.arange(k.shape[1]))[None, :]
+
+            def mask_fn(qpos):
+                return jnp.broadcast_to(
+                    kv_pos[:, None, :] >= 0,
+                    (qpos.shape[0], qpos.shape[1], k.shape[1]))
+        else:
+            kv_pos = positions
+
+            def mask_fn(qpos):
+                kp = kv_pos[:, None, :] if kv_pos.ndim == 2 \
+                    else kv_pos[None, None, :]
+                m = jnp.ones((qpos.shape[0], qpos.shape[1], k.shape[1]),
+                             bool)
+                if causal:
+                    m &= kp <= qpos[:, :, None]
+                if window:
+                    m &= (qpos[:, :, None] - kp) < window
+                return m
+
+    if positions.ndim == 1:
+        positions = jnp.broadcast_to(positions[None, :], (b, sq))
+    out = _chunked_attention(q, k, v, mask_fn, positions, q_chunk)
+    out = dense_apply(p["o"], out.reshape(b, sq, cfg.num_heads * hd), **qm)
+    return out, new_cache
+
+
+def _cache_write(cache, k, v, slot):
+    """Write a [B, s, KVH, hd] float slice at `slot` (quantizing if the
+    cache is int8)."""
+    dus = jax.lax.dynamic_update_slice_in_dim
+    if "k_scale" in cache:
+        qk, sk = _kv_quantize(k)
+        qv, sv = _kv_quantize(v)
+        return {"k": dus(cache["k"], qk, slot, 1),
+                "v": dus(cache["v"], qv, slot, 1),
+                "k_scale": dus(cache["k_scale"], sk, slot, 1),
+                "v_scale": dus(cache["v_scale"], sv, slot, 1)}
+    return {"k": dus(cache["k"], k.astype(cache["k"].dtype), slot, 1),
+            "v": dus(cache["v"], v.astype(cache["v"].dtype), slot, 1)}
+
+
+def _cache_read(cache, dtype):
+    if "k_scale" in cache:
+        return (_kv_dequantize(cache["k"], cache["k_scale"], dtype),
+                _kv_dequantize(cache["v"], cache["v_scale"], dtype))
+    return cache["k"], cache["v"]
+
+
+def _ring_positions(cache_index, size, window):
+    """Absolute positions stored in each ring slot (-1 = empty)."""
+    slots = jnp.arange(size)
+    if not window:
+        pos = slots
+        return jnp.where(slots <= cache_index, pos, -1)
+    # slot s holds the latest position p <= cache_index with p % size == s
+    cur_slot = cache_index % size
+    pos = cache_index - ((cur_slot - slots) % size)
+    return jnp.where(pos >= 0, pos, -1)

@@ -1,0 +1,94 @@
+"""sparq-cnn: the paper's conv2d benchmark network as a QAT-able model.
+
+A small channel-first... (TPU-native: NHWC) CNN whose conv layers run:
+  * 'qat'    — PACT-clipped activations + LSQ weights, float conv (training);
+  * 'packed' — the deployed Sparq path: runtime quantize+P1-pack over
+               channels, packed conv2d kernel, affine dequant.
+
+This model backs benchmarks/fig4_conv2d.py and fig5_precision_sweep.py and
+examples/train_cnn_qat.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing, quant
+from repro.core.packing import PackSpec
+from repro.kernels import ops
+from repro.models import common
+
+
+def conv_init(key, fh, fw, cin, cout, qcfg, dtype=jnp.float32):
+    w = jax.random.normal(key, (fh, fw, cin, cout), jnp.float32) \
+        / np.sqrt(fh * fw * cin)
+    p = {"kernel": w.astype(dtype)}
+    if qcfg.enabled:
+        p["w_step"] = quant.init_step_from_data(w, qcfg.w_bits, True)
+        p["alpha"] = jnp.float32(4.0)   # PACT clip
+    return p
+
+
+def conv_apply(p, x, qcfg, *, quant_mode="none", padding="SAME",
+               backend="auto"):
+    if quant_mode == "packed" and qcfg.enabled:
+        spec = PackSpec(qcfg.w_bits, qcfg.a_bits, jnp.dtype(qcfg.lane_dtype),
+                        qcfg.n_pack)
+        w = p["kernel"].astype(jnp.float32)
+        w_scale = p.get("w_step", quant.calibrate_absmax(w, qcfg.w_bits)[0])
+        w_zp = qcfg.w_zero_point
+        q_w = quant.quantize_affine(w, w_scale, w_zp, qcfg.w_bits)
+        wp = packing.pack_weights(q_w, spec, axis=2)
+        # activations: PACT range [0, alpha] -> z=0 lattice
+        alpha = p.get("alpha", jnp.float32(4.0))
+        a_scale = alpha / qcfg.qmax_a
+        xq = quant.quantize_affine(jnp.clip(x, 0.0, alpha), a_scale, 0,
+                                   qcfg.a_bits)
+        xp = packing.pack_activations(xq, spec, axis=-1)
+        acc = ops.packed_conv2d(xp, wp, spec, padding=padding,
+                                backend=backend).astype(jnp.float32)
+        # zero-point correction (z_a = 0): acc - z_w * patch_sums(a)
+        ones = jnp.ones(p["kernel"].shape[:3] + (1,), jnp.int32)
+        psum = jax.lax.conv_general_dilated(
+            xq, ones, (1, 1), padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            preferred_element_type=jnp.int32).astype(jnp.float32)
+        return a_scale * w_scale * (acc - w_zp * psum)
+    w = p["kernel"].astype(jnp.float32)
+    xx = x.astype(jnp.float32)
+    if quant_mode == "qat" and qcfg.enabled:
+        w = quant.lsq_fake_quant(w, p["w_step"], qcfg.w_bits, True)
+        alpha = p["alpha"]
+        xc = quant.pact_clip(xx, alpha, qcfg.a_bits)
+        xx = quant.fake_quant(xc, alpha / qcfg.qmax_a, jnp.float32(0.0),
+                              qcfg.a_bits)
+    return jax.lax.conv_general_dilated(
+        xx, w, (1, 1), padding, dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def init_params(key, cfg):
+    chans = cfg.cnn_channels
+    ks = jax.random.split(key, len(chans) + 1)
+    layers = []
+    cin = chans[0]  # input is pre-embedded to chans[0] by a stem below
+    stem = conv_init(ks[0], 3, 3, 3, chans[0], cfg.quant)
+    for i, cout in enumerate(chans):
+        layers.append(conv_init(ks[i], cfg.cnn_kernel, cfg.cnn_kernel,
+                                cin, cout, cfg.quant))
+        cin = cout
+    head = common.dense_init(ks[-1], cin, cfg.cnn_num_classes)
+    return {"stem": stem, "layers": layers, "head": head}
+
+
+def forward(params, cfg, x, *, quant_mode="none", backend="auto"):
+    """x: [N, H, W, 3] image -> logits [N, classes]."""
+    h = jax.nn.relu(conv_apply(params["stem"], x, cfg.quant,
+                               quant_mode="none"))
+    for p in params["layers"]:
+        h = jax.nn.relu(conv_apply(p, h, cfg.quant, quant_mode=quant_mode,
+                                   backend=backend))
+    pooled = jnp.mean(h, axis=(1, 2))
+    return common.dense_apply(params["head"], pooled,
+                              compute_dtype=jnp.float32)

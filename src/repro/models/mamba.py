@@ -1,0 +1,128 @@
+"""Mamba (selective SSM) block for the jamba hybrid architecture.
+
+Standard Mamba-1: in-proj -> (x, z); depthwise causal conv1d + SiLU; input-
+dependent (dt, B, C); selective scan; gate by SiLU(z); out-proj.  The scan
+carries state [B, d_inner, d_state] so decode is O(1) per token — this is why
+jamba runs the long_500k shape (DESIGN.md §5).
+
+The in/out projections are quantizable (the paper's technique); the recurrence
+stays fp32 for stability.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import common
+from repro.models.common import dense_apply, dense_init
+
+
+def mamba_init(key, cfg, *, dtype=jnp.float32):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    ds = cfg.ssm_state_dim
+    dtr = cfg.dt_rank
+    ks = jax.random.split(key, 6)
+    p = {
+        "in_proj": dense_init(ks[0], d, 2 * di, dtype=dtype, quantized=True,
+                              qcfg=cfg.quant),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv_width, di),
+                                     jnp.float32)
+                   / np.sqrt(cfg.ssm_conv_width)).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], di, dtr + 2 * ds, dtype=dtype,
+                             quantized=True, qcfg=cfg.quant),
+        "dt_proj": dense_init(ks[3], dtr, di, use_bias=True, dtype=dtype),
+        # S4D-real initialization of A (negative real spectrum).
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, d, dtype=dtype, quantized=True,
+                               qcfg=cfg.quant),
+    }
+    return p
+
+
+def init_mamba_cache(cfg, batch, dtype=jnp.float32):
+    di = cfg.ssm_expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, cfg.ssm_state_dim), dtype),
+    }
+
+
+def _ssm_params(p, cfg, xc, quant_mode):
+    """Input-dependent dt, B, C from the conved activation xc [B, S, di]."""
+    cd = common.dtype_of(cfg.compute_dtype)
+    qm = dict(qcfg=cfg.quant, quant_mode=quant_mode, compute_dtype=cd)
+    dtr, ds = cfg.dt_rank, cfg.ssm_state_dim
+    dbc = dense_apply(p["x_proj"], xc, **qm).astype(jnp.float32)
+    dt_r, b_mat, c_mat = jnp.split(dbc, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(
+        dense_apply(p["dt_proj"], dt_r.astype(cd),
+                    compute_dtype=jnp.float32))
+    return dt, b_mat, c_mat
+
+
+def mamba_apply(p, cfg, x, *, quant_mode="none", cache=None,
+                cache_index=None):
+    """x: [B, S, d].  Returns (y, new_cache)."""
+    b, s, _ = x.shape
+    cd = common.dtype_of(cfg.compute_dtype)
+    qm = dict(qcfg=cfg.quant, quant_mode=quant_mode, compute_dtype=cd)
+    di = cfg.ssm_expand * cfg.d_model
+    cw = cfg.ssm_conv_width
+
+    xz = dense_apply(p["in_proj"], x, **qm)
+    xi, z = jnp.split(xz, 2, axis=-1)                 # [B, S, di] each
+    xi32 = xi.astype(jnp.float32)
+
+    # depthwise causal conv1d
+    if cache is not None and cache_index is not None:
+        hist = jnp.concatenate([cache["conv"], xi32], axis=1)  # [B,cw,di]
+        conv_out = jnp.einsum("bkd,kd->bd", hist,
+                              p["conv_w"].astype(jnp.float32))
+        conv_out = (conv_out + p["conv_b"].astype(jnp.float32))[:, None]
+        new_conv = hist[:, 1:]
+    else:
+        padded = jnp.pad(xi32, ((0, 0), (cw - 1, 0), (0, 0)))
+        windows = jnp.stack(
+            [padded[:, i:i + s] for i in range(cw)], axis=2)  # [B,S,cw,di]
+        conv_out = jnp.einsum("bskd,kd->bsd", windows,
+                              p["conv_w"].astype(jnp.float32))
+        conv_out = conv_out + p["conv_b"].astype(jnp.float32)
+        new_conv = padded[:, -(cw - 1):] if cache is not None else None
+    xc = jax.nn.silu(conv_out)                        # [B, S|1, di]
+
+    dt, b_mat, c_mat = _ssm_params(p, cfg, xc.astype(cd), quant_mode)
+    a = -jnp.exp(p["A_log"])                          # [di, ds]
+
+    da = jnp.exp(dt[..., None] * a)                   # [B,S,di,ds]
+    dbx = (dt * xc)[..., None] * b_mat[:, :, None, :]  # [B,S,di,ds]
+
+    if cache is not None and cache_index is not None:
+        h = cache["ssm"] * da[:, 0] + dbx[:, 0]
+        y = jnp.einsum("bds,bs->bd", h, c_mat[:, 0])[:, None]
+        new_ssm = h
+    else:
+        def step(h, inp):
+            da_t, dbx_t, c_t = inp
+            h = h * da_t + dbx_t
+            return h, jnp.einsum("bds,bs->bd", h, c_t)
+
+        h0 = jnp.zeros((b, di, cfg.ssm_state_dim), jnp.float32)
+        last, ys = jax.lax.scan(
+            step, h0, (jnp.moveaxis(da, 1, 0), jnp.moveaxis(dbx, 1, 0),
+                       jnp.moveaxis(c_mat, 1, 0)))
+        y = jnp.moveaxis(ys, 0, 1)                    # [B, S, di]
+        new_ssm = last if cache is not None else None
+
+    y = y + xc.astype(jnp.float32) * p["D"]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = dense_apply(p["out_proj"], y.astype(cd), **qm)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv, "ssm": new_ssm}
+    return out, new_cache

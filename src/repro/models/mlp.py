@@ -1,0 +1,33 @@
+"""Gated (SwiGLU) and plain MLPs with quantizable projections."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import dense_apply, dense_init
+
+
+def mlp_init(key, cfg, d_ff=None, *, gated=True, dtype=jnp.float32):
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"up": dense_init(ks[0], cfg.d_model, d_ff, dtype=dtype,
+                          quantized=True, qcfg=cfg.quant),
+         "down": dense_init(ks[1], d_ff, cfg.d_model, dtype=dtype,
+                            quantized=True, qcfg=cfg.quant)}
+    if gated:
+        p["gate"] = dense_init(ks[2], cfg.d_model, d_ff, dtype=dtype,
+                               quantized=True, qcfg=cfg.quant)
+    return p
+
+
+def mlp_apply(p, cfg, x, *, quant_mode="none"):
+    cd = common.dtype_of(cfg.compute_dtype)
+    qm = dict(qcfg=cfg.quant, quant_mode=quant_mode, compute_dtype=cd)
+    up = dense_apply(p["up"], x, **qm)
+    if "gate" in p:
+        h = jax.nn.silu(dense_apply(p["gate"], x, **qm)) * up
+    else:
+        h = jax.nn.gelu(up)
+    return dense_apply(p["down"], h, **qm)

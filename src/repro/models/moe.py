@@ -1,0 +1,161 @@
+"""Mixture-of-Experts: top-k router + two execution paths.
+
+* 'einsum'  — capacity-bounded one-hot dispatch/combine with group blocking
+  (MaxText-style).  Fully SPMD-partitionable: the expert dim of the dispatched
+  tensors shards over the tensor axis when num_experts divides it (true EP —
+  jamba 16e on model=16); otherwise experts keep FSDP+TP sharding
+  (mixtral 8e — TP-within-expert, DESIGN.md §6).  Used by the dry-run.
+* 'ragged'  — sort-by-expert + jax.lax.ragged_dot, dropless; the single-host
+  serving fast path (beyond-paper optimization, benchmarked in §Perf).
+
+Expert FFNs are SwiGLU with quantizable projections (the paper's technique
+applies to each expert matrix).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant as quant_lib
+from repro.models import common
+from repro.parallel.sharding import constrain
+
+
+def moe_init(key, cfg, *, dtype=jnp.float32):
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+
+    def ek(key, din, dout, scale):
+        w = jax.random.normal(key, (e, din, dout), jnp.float32) * scale
+        return w.astype(dtype)
+
+    p = {
+        "router": common.dense_init(ks[0], d, e, dtype=jnp.float32),
+        "up": {"kernel": ek(ks[1], d, f, 1 / np.sqrt(d))},
+        "gate": {"kernel": ek(ks[2], d, f, 1 / np.sqrt(d))},
+        "down": {"kernel": ek(ks[3], f, d, 1 / np.sqrt(f))},
+    }
+    if cfg.quant.enabled:
+        for name in ("up", "gate", "down"):
+            k = p[name]["kernel"]
+            p[name]["w_step"] = quant_lib.init_step_from_data(
+                k.astype(jnp.float32), cfg.quant.w_bits, True)
+            p[name]["a_step"] = jnp.asarray(
+                1.0 / np.sqrt(cfg.quant.qmax_a), jnp.float32)
+    return p
+
+
+def _expert_kernel(p, name, cfg, quant_mode):
+    # experts use fake-quant in both QAT and packed-serve modes (packed
+    # expert einsums are future work; DESIGN.md §5)
+    k = p[name]["kernel"]
+    if quant_mode in ("qat", "packed") and cfg.quant.enabled and "w_step" in p[name]:
+        k = quant_lib.lsq_fake_quant(k.astype(jnp.float32),
+                                     p[name]["w_step"], cfg.quant.w_bits,
+                                     True)
+    return k.astype(common.dtype_of(cfg.compute_dtype))
+
+
+def _maybe_fq_act(x, p, name, cfg, quant_mode):
+    if quant_mode in ("qat", "packed") and cfg.quant.enabled and "a_step" in p[name]:
+        x = quant_lib.lsq_fake_quant(x.astype(jnp.float32),
+                                     p[name]["a_step"], cfg.quant.a_bits,
+                                     True)
+    return x.astype(common.dtype_of(cfg.compute_dtype))
+
+
+def router_probs(p, cfg, x):
+    """Top-k routing probabilities.  x: [T, d] -> (probs [T,k], idx [T,k],
+    aux_loss)."""
+    logits = jnp.dot(x.astype(jnp.float32), p["router"]["kernel"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, cfg.num_experts_per_tok)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+    # Shazeer load-balancing auxiliary loss.
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jax.nn.one_hot(top_i[:, 0], cfg.num_experts, dtype=jnp.float32),
+        axis=0)
+    aux = cfg.num_experts * jnp.sum(me * ce)
+    return top_p, top_i, aux
+
+
+def moe_apply_einsum(p, cfg, x, *, quant_mode="none"):
+    """Capacity-dispatch path.  x: [B, S, d] -> [B, S, d], aux loss."""
+    b, s, d = x.shape
+    cd = common.dtype_of(cfg.compute_dtype)
+    t = b * s
+    xt = x.reshape(t, d)
+    top_p, top_i, aux = router_probs(p, cfg, xt)
+
+    g = max(1, min(cfg.moe_group_size, t))
+    while t % g:
+        g -= 1
+    ng = t // g
+    cap = int(np.ceil(g * cfg.num_experts_per_tok * cfg.capacity_factor
+                      / cfg.num_experts))
+    cap = max(cap, cfg.num_experts_per_tok)
+
+    # position of each (token, choice) within its expert queue, per group
+    one_hot = jax.nn.one_hot(top_i, cfg.num_experts, dtype=jnp.int32)
+    oh = one_hot.reshape(ng, g, cfg.num_experts_per_tok, cfg.num_experts)
+    flat = oh.reshape(ng, g * cfg.num_experts_per_tok, cfg.num_experts)
+    pos = jnp.cumsum(flat, axis=1) - 1                     # queue slots
+    pos = pos.reshape(ng, g, cfg.num_experts_per_tok, cfg.num_experts)
+    keep = (pos < cap) & (oh > 0)
+    disp = (jax.nn.one_hot(jnp.where(keep, pos, -1), cap, dtype=cd)
+            * oh[..., None].astype(cd))                    # [ng,g,k,E,cap]
+    dispatch = jnp.sum(disp, axis=2)                       # [ng,g,E,cap]
+    probs = top_p.reshape(ng, g, cfg.num_experts_per_tok).astype(cd)
+    combine = jnp.sum(disp * probs[..., None, None], axis=2)
+
+    xg = xt.reshape(ng, g, d).astype(cd)
+    expert_in = jnp.einsum("ngec,ngd->necd", dispatch, xg)  # [ng,E,cap,d]
+    expert_in = constrain(expert_in, "dp", "model", None, None)
+    ein = _maybe_fq_act(expert_in, p, "up", cfg, quant_mode)
+    up = jnp.einsum("necd,edf->necf", ein,
+                    _expert_kernel(p, "up", cfg, quant_mode))
+    gate = jnp.einsum("necd,edf->necf", ein,
+                      _expert_kernel(p, "gate", cfg, quant_mode))
+    h = jax.nn.silu(gate) * up
+    h = _maybe_fq_act(h, p, "down", cfg, quant_mode)
+    out = jnp.einsum("necf,efd->necd", h,
+                     _expert_kernel(p, "down", cfg, quant_mode))
+    out = constrain(out, "dp", "model", None, None)
+    y = jnp.einsum("ngec,necd->ngd", combine, out)
+    return y.reshape(b, s, d).astype(x.dtype), aux
+
+
+def moe_apply_ragged(p, cfg, x, *, quant_mode="none"):
+    """Dropless sort-based path using jax.lax.ragged_dot (single host)."""
+    b, s, d = x.shape
+    cd = common.dtype_of(cfg.compute_dtype)
+    t, k = b * s, cfg.num_experts_per_tok
+    xt = x.reshape(t, d)
+    top_p, top_i, aux = router_probs(p, cfg, xt)
+
+    flat_e = top_i.reshape(-1)                       # [t*k]
+    order = jnp.argsort(flat_e, stable=True)
+    tok_of = order // k
+    sorted_x = jnp.take(xt, tok_of, axis=0).astype(cd)
+    group_sizes = jnp.bincount(flat_e, length=cfg.num_experts)
+
+    def rdot(lhs, name):
+        return jax.lax.ragged_dot(
+            lhs, _expert_kernel(p, name, cfg, quant_mode), group_sizes)
+
+    sx = _maybe_fq_act(sorted_x, p, "up", cfg, quant_mode)
+    h = jax.nn.silu(rdot(sx, "gate")) * rdot(sx, "up")
+    h = _maybe_fq_act(h, p, "down", cfg, quant_mode)
+    out = rdot(h, "down")                            # [t*k, d]
+    w = jnp.take(top_p.reshape(-1), order)[:, None].astype(cd)
+    y = jnp.zeros((t, d), cd).at[tok_of].add(out * w)
+    return y.reshape(b, s, d).astype(x.dtype), aux
+
+
+def moe_apply(p, cfg, x, *, quant_mode="none", path="einsum"):
+    if path == "ragged":
+        return moe_apply_ragged(p, cfg, x, quant_mode=quant_mode)
+    return moe_apply_einsum(p, cfg, x, quant_mode=quant_mode)

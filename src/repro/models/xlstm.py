@@ -1,0 +1,292 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM + recurrent sLSTM.
+
+mLSTM (matrix memory, exponential input gate, sigmoid forget gate) is
+implemented in the *chunkwise-parallel* form: within a chunk of length L the
+recurrence is evaluated as a masked, gate-weighted attention-like product
+(MXU matmuls); across chunks a stabilized (log-space, all exponents <= 0)
+matrix state (C, n, m) is carried by a scan.  This is the TPU-native
+realization — the sequential form would leave the MXU idle and store an
+O(S) trail of d_head^2 states (DESIGN.md §2 hardware-adaptation notes).
+
+sLSTM (scalar memory, recurrent gate feedback) is inherently sequential; it
+runs as a chunk-checkpointed lax.scan.
+
+Projections are quantizable Dense layers; the recurrences run fp32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import common
+from repro.models.common import dense_apply, dense_init
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg, *, dtype=jnp.float32):
+    d = cfg.d_model
+    inner = int(cfg.mlstm_proj_factor * d)
+    nh = cfg.num_heads
+    ks = jax.random.split(key, 8)
+    p = {
+        "up": dense_init(ks[0], d, 2 * inner, dtype=dtype, quantized=True,
+                         qcfg=cfg.quant),
+        "q": dense_init(ks[1], inner, inner, dtype=dtype, quantized=True,
+                        qcfg=cfg.quant),
+        "k": dense_init(ks[2], inner, inner, dtype=dtype, quantized=True,
+                        qcfg=cfg.quant),
+        "v": dense_init(ks[3], inner, inner, dtype=dtype, quantized=True,
+                        qcfg=cfg.quant),
+        "if_gate": dense_init(ks[4], inner, 2 * nh, use_bias=True,
+                              dtype=dtype),
+        "norm": common.rmsnorm_init(inner, dtype),
+        "down": dense_init(ks[5], inner, d, dtype=dtype, quantized=True,
+                           qcfg=cfg.quant),
+    }
+    # forget-gate bias init: strongly positive => long memory at init.
+    p["if_gate"]["bias"] = p["if_gate"]["bias"].at[nh:].set(3.0)
+    return p
+
+
+def init_mlstm_cache(cfg, batch, dtype=jnp.float32):
+    inner = int(cfg.mlstm_proj_factor * cfg.d_model)
+    nh = cfg.num_heads
+    hd = inner // nh
+    return {
+        "C": jnp.zeros((batch, nh, hd, hd), dtype),
+        "n": jnp.zeros((batch, nh, hd), dtype),
+        "m": jnp.full((batch, nh), -1e30, dtype),
+    }
+
+
+def _mlstm_chunk(q, k, v, i_raw, g_log, state):
+    """One chunk of the stabilized chunkwise mLSTM.
+
+    q,k,v: [B, NH, L, hd] fp32; i_raw,g_log: [B, NH, L]; state (C, n, m)
+    stored *descaled* by exp(m).  Returns (h [B,NH,L,hd], new_state).
+    All exponents below are <= 0 by construction.
+    """
+    c_prev, n_prev, m_prev = state
+    hd = q.shape[-1]
+    big = q.shape[2]
+    gc = jnp.cumsum(g_log, axis=-1)                      # G_t
+    s_run = jax.lax.cummax(i_raw - gc, axis=i_raw.ndim - 1)  # s_t
+    m_eff = jnp.maximum(s_run, m_prev[..., None])        # M_t - G_t
+    m_t = gc + m_eff
+
+    # intra-chunk gate-weighted scores: A[t, tau] = exp(i_tau - G_tau - m_eff_t)
+    log_a = (i_raw - gc)[..., None, :] - m_eff[..., :, None]
+    mask = jnp.tril(jnp.ones((big, big), bool))
+    a = jnp.where(mask, jnp.exp(log_a), 0.0)             # [B,NH,L,L]
+
+    scale = hd ** -0.5
+    scores = jnp.einsum("bhtd,bhsd->bhts", q * scale, k)
+    h_num = jnp.einsum("bhts,bhsd->bhtd", a * scores, v)
+    n_t = jnp.einsum("bhts,bhsd->bhtd", a, k)
+
+    # inter-chunk contribution, weight b_t = exp(m_prev - max(s_t, m_prev))
+    b = jnp.exp(m_prev[..., None] - m_eff)               # [B,NH,L]
+    h_num = h_num + b[..., None] * jnp.einsum("bhtd,bhde->bhte",
+                                              q * scale, c_prev)
+    n_t = n_t + b[..., None] * n_prev[..., None, :]
+
+    qn = jnp.einsum("bhtd,bhtd->bht", q * scale, n_t)
+    denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_t))
+    h = h_num / denom[..., None]
+
+    # ---- state update at chunk end ----
+    g_total = gc[..., -1]                                # G_L
+    m_new = g_total + jnp.maximum(s_run[..., -1], m_prev)
+    decay = jnp.exp(g_total + m_prev - m_new)            # <= 1
+    w_kv = jnp.exp((g_total[..., None] - gc) + i_raw - m_new[..., None])
+    c_new = (decay[..., None, None] * c_prev
+             + jnp.einsum("bhs,bhsd,bhse->bhde", w_kv, k, v))
+    n_new = decay[..., None] * n_prev + jnp.einsum("bhs,bhsd->bhd", w_kv, k)
+    return h, (c_new, n_new, m_new)
+
+
+def mlstm_apply(p, cfg, x, *, quant_mode="none", cache=None,
+                cache_index=None, chunk=128):
+    """x: [B, S, d] -> (y, new_cache)."""
+    b, s, d = x.shape
+    cd = common.dtype_of(cfg.compute_dtype)
+    qm = dict(qcfg=cfg.quant, quant_mode=quant_mode, compute_dtype=cd)
+    inner = int(cfg.mlstm_proj_factor * d)
+    nh = cfg.num_heads
+    hd = inner // nh
+
+    up = dense_apply(p["up"], x, **qm)
+    xm, z = jnp.split(up, 2, axis=-1)
+
+    def heads(t):
+        return t.reshape(b, s, nh, hd).transpose(0, 2, 1, 3) \
+            .astype(jnp.float32)
+
+    q = heads(dense_apply(p["q"], xm, **qm))
+    k = heads(dense_apply(p["k"], xm, **qm))
+    v = heads(dense_apply(p["v"], xm, **qm))
+    gates = dense_apply(p["if_gate"], xm,
+                        compute_dtype=jnp.float32)       # [B,S,2nh]
+    i_raw = gates[..., :nh].transpose(0, 2, 1)           # [B,NH,S]
+    g_log = jax.nn.log_sigmoid(gates[..., nh:]).transpose(0, 2, 1)
+
+    if cache is not None and cache_index is not None:
+        state = (cache["C"].astype(jnp.float32),
+                 cache["n"].astype(jnp.float32),
+                 cache["m"].astype(jnp.float32))
+        h, (c2, n2, m2) = _mlstm_chunk(q, k, v, i_raw, g_log, state)
+        new_cache = {"C": c2.astype(cache["C"].dtype),
+                     "n": n2.astype(cache["n"].dtype),
+                     "m": m2.astype(cache["m"].dtype)}
+    else:
+        l_chunk = min(chunk, s)
+        pad = (-s) % l_chunk
+        if pad:
+            q, k, v = (jnp.pad(t, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                       for t in (q, k, v))
+            i_raw = jnp.pad(i_raw, ((0, 0), (0, 0), (0, pad)), constant_values=-1e30)
+            g_log = jnp.pad(g_log, ((0, 0), (0, 0), (0, pad)))
+        nchunks = q.shape[2] // l_chunk
+
+        def split(t, extra=()):
+            shp = (b, nh, nchunks, l_chunk) + tuple(extra)
+            return jnp.moveaxis(t.reshape(shp), 2, 0)
+
+        qs, ks_, vs = split(q, (hd,)), split(k, (hd,)), split(v, (hd,))
+        is_, gs = split(i_raw), split(g_log)
+        state0 = (jnp.zeros((b, nh, hd, hd), jnp.float32),
+                  jnp.zeros((b, nh, hd), jnp.float32),
+                  jnp.full((b, nh), -1e30, jnp.float32))
+
+        def body(st, inp):
+            h, st2 = _mlstm_chunk(*inp, st)
+            return st2, h
+
+        last, hs = jax.lax.scan(body, state0, (qs, ks_, vs, is_, gs))
+        h = jnp.moveaxis(hs, 0, 2).reshape(b, nh, nchunks * l_chunk, hd)
+        h = h[:, :, :s]
+        new_cache = None
+        if cache is not None:
+            new_cache = {"C": last[0].astype(cache["C"].dtype),
+                         "n": last[1].astype(cache["n"].dtype),
+                         "m": last[2].astype(cache["m"].dtype)}
+
+    h = h.transpose(0, 2, 1, 3).reshape(b, -1, inner)[:, :s]
+    h = common.rmsnorm_apply(p["norm"], h.astype(cd), cfg.norm_eps)
+    h = h * jax.nn.silu(z.astype(cd))
+    return dense_apply(p["down"], h, **qm), new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg, *, dtype=jnp.float32):
+    d = cfg.d_model
+    nh = cfg.num_heads
+    hd = d // nh
+    ks = jax.random.split(key, 4)
+    dff = int(d * 4 / 3)
+    p = {
+        # gate path feeds the recurrence: keep fp (DESIGN.md §5)
+        "w_gates": dense_init(ks[0], d, 4 * d, use_bias=True, dtype=dtype),
+        # block-diagonal (per-head) recurrent weights
+        "r_gates": (jax.random.normal(ks[1], (nh, hd, 4 * hd), jnp.float32)
+                    / np.sqrt(hd)).astype(dtype),
+        "norm": common.rmsnorm_init(d, dtype),
+        "ffn_up": dense_init(ks[2], d, 2 * dff, dtype=dtype, quantized=True,
+                             qcfg=cfg.quant),
+        "ffn_down": dense_init(ks[3], dff, d, dtype=dtype, quantized=True,
+                               qcfg=cfg.quant),
+    }
+    b = p["w_gates"]["bias"]
+    p["w_gates"]["bias"] = b.at[2 * d:3 * d].set(3.0)   # forget bias
+    return p
+
+
+def init_slstm_cache(cfg, batch, dtype=jnp.float32):
+    d = cfg.d_model
+    nh = cfg.num_heads
+    hd = d // nh
+    z = lambda: jnp.zeros((batch, nh, hd), dtype)
+    return {"c": z(), "n": z(), "h": z(),
+            "m": jnp.full((batch, nh, hd), -1e30, dtype)}
+
+
+def _slstm_step(p_r, state, wx, nh, hd):
+    """wx: [B, 4d] precomputed input contribution; state dict of [B,nh,hd]."""
+    c, n, h, m = state
+    rx = jnp.einsum("bhd,hde->bhe", h, p_r)              # [B,nh,4hd]
+    gates = wx.reshape(wx.shape[0], nh, 4 * hd) + rx
+    z_in, i_raw, f_raw, o_raw = jnp.split(gates, 4, axis=-1)
+    z_t = jnp.tanh(z_in)
+    o_t = jax.nn.sigmoid(o_raw)
+    f_log = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(f_log + m, i_raw)
+    i_p = jnp.exp(i_raw - m_new)
+    f_p = jnp.exp(f_log + m - m_new)
+    c_new = f_p * c + i_p * z_t
+    n_new = jnp.maximum(f_p * n + i_p, jnp.exp(-m_new))
+    h_new = o_t * c_new / n_new
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_apply(p, cfg, x, *, quant_mode="none", cache=None,
+                cache_index=None, chunk=256):
+    """x: [B, S, d] -> (y, new_cache).  Sequential scan (chunk-checkpointed)."""
+    b, s, d = x.shape
+    cd = common.dtype_of(cfg.compute_dtype)
+    qm = dict(qcfg=cfg.quant, quant_mode=quant_mode, compute_dtype=cd)
+    nh = cfg.num_heads
+    hd = d // nh
+    wx = dense_apply(p["w_gates"], x, compute_dtype=jnp.float32)
+    r = p["r_gates"].astype(jnp.float32)
+
+    if cache is not None and cache_index is not None:
+        state = (cache["c"].astype(jnp.float32),
+                 cache["n"].astype(jnp.float32),
+                 cache["h"].astype(jnp.float32),
+                 cache["m"].astype(jnp.float32))
+        state = _slstm_step(r, state, wx[:, 0], nh, hd)
+        h_seq = state[2][:, None]
+        new_cache = {k2: v2.astype(cache[k2].dtype) for k2, v2 in
+                     zip(("c", "n", "h", "m"), state)}
+    else:
+        state = (jnp.zeros((b, nh, hd), jnp.float32),
+                 jnp.zeros((b, nh, hd), jnp.float32),
+                 jnp.zeros((b, nh, hd), jnp.float32),
+                 jnp.full((b, nh, hd), -1e30, jnp.float32))
+
+        @jax.checkpoint
+        def chunk_body(st, wxc):
+            def step(st2, wxt):
+                st3 = _slstm_step(r, st2, wxt, nh, hd)
+                return st3, st3[2]
+            return jax.lax.scan(step, st, wxc)
+
+        l_chunk = min(chunk, s)
+        pad = (-s) % l_chunk
+        wxp = jnp.pad(wx, ((0, 0), (0, pad), (0, 0)))
+        nchunks = wxp.shape[1] // l_chunk
+        # [nchunks, l_chunk, B, 4d] — outer scan over chunks, inner over time
+        wxc = wxp.reshape(b, nchunks, l_chunk, -1).transpose(1, 2, 0, 3)
+        state, hs = jax.lax.scan(chunk_body, state, wxc)
+        hs = hs.reshape(nchunks * l_chunk, b, nh, hd)
+        h_seq = jnp.moveaxis(hs, 0, 1)[:, :s]
+        new_cache = None
+        if cache is not None:
+            new_cache = {k2: v2.astype(cache[k2].dtype) for k2, v2 in
+                         zip(("c", "n", "h", "m"), state)}
+
+    h = h_seq.reshape(b, -1, d).astype(cd)
+    h = common.rmsnorm_apply(p["norm"], h, cfg.norm_eps)
+    # post-sLSTM gated FFN (proj factor 4/3)
+    upg = dense_apply(p["ffn_up"], h, **qm)
+    u, g = jnp.split(upg, 2, axis=-1)
+    y = dense_apply(p["ffn_down"], u * jax.nn.silu(g), **qm)
+    return y, new_cache

@@ -1,0 +1,35 @@
+"""LR schedules: cosine-with-warmup and WSD (warmup-stable-decay, MiniCPM)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(step, *, peak_lr, warmup_steps, total_steps,
+                       final_frac=0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    progress = jnp.clip((step - warmup_steps)
+                        / jnp.maximum(total_steps - warmup_steps, 1), 0, 1)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(
+        jnp.pi * progress))
+    return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+
+
+def wsd(step, *, peak_lr, warmup_steps, total_steps, decay_frac=0.1,
+        final_frac=0.01):
+    """MiniCPM's Warmup-Stable-Decay: flat plateau, sharp final decay."""
+    step = jnp.asarray(step, jnp.float32)
+    decay_steps = decay_frac * total_steps
+    decay_start = total_steps - decay_steps
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    progress = jnp.clip((step - decay_start) / jnp.maximum(decay_steps, 1),
+                        0, 1)
+    # exponential decay to final_frac over the decay window
+    decay = peak_lr * jnp.exp(jnp.log(final_frac) * progress)
+    lr = jnp.where(step < warmup_steps, warm, peak_lr)
+    return jnp.where(step > decay_start, decay, lr)
+
+
+def get_schedule(name: str):
+    return {"cosine": cosine_with_warmup, "wsd": wsd}[name]

@@ -1,0 +1,157 @@
+"""Three-term roofline from a compiled dry-run artifact (DESIGN.md §9).
+
+  compute    = HLO_FLOPs(per-device) / peak_FLOP/s
+  memory     = HLO_bytes(per-device) / HBM_bw
+  collective = sum(collective operand bytes, per-device) / ICI link bw
+
+cost_analysis() gives FLOPs/bytes; collective bytes are parsed from the
+compiled (post-SPMD) HLO text, summing operand sizes of all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute ops.
+"""
+
+from __future__ import annotations
+
+import re
+
+import numpy as np
+
+from repro.roofline import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# operand type tokens like  bf16[16,4096]{1,0}  inside a collective call
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+_OP_RE = re.compile(
+    r"=\s+((?:\(?[\w\[\]{},\s]+?\)?))\s+("
+    + "|".join(_COLLECTIVES) + r")(-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum *operand* bytes per collective kind from compiled (post-SPMD) HLO.
+
+    Compiled HLO prints operands by name only, so we read the RESULT type and
+    convert to operand bytes per kind: all-reduce / all-to-all / permute have
+    operand == result; all-gather operand = result / group; reduce-scatter
+    operand = result * group (group size parsed from replica_groups=[n,g]).
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    count = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "-done(" in stripped:
+            continue  # -start carries the shapes; -done would double count
+        m = _OP_RE.search(stripped)
+        if not m:
+            continue
+        result_types, kind = m.group(1), m.group(2)
+        nbytes = sum(_shape_bytes(d, s)
+                     for d, s in _TYPE_RE.findall(result_types))
+        if nbytes == 0:
+            continue
+        gm = _GROUPS_RE.search(stripped)
+        group = int(gm.group(2)) if gm else 1
+        if kind == "all-gather":
+            nbytes = nbytes // max(group, 1)
+        elif kind == "reduce-scatter":
+            nbytes = nbytes * max(group, 1)
+        if kind == "all-gather" and "-start(" in stripped:
+            # result of -start is a (operand, result) tuple: halve the
+            # overcount from summing both tuple components
+            nbytes = nbytes // 2
+        out[kind] += nbytes
+        count[kind] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = count
+    return out
+
+
+def roofline_terms(cost: dict, coll_bytes: int, chips: int) -> dict:
+    flops = float(cost.get("flops", 0.0) or 0.0)
+    nbytes = float(cost.get("bytes accessed", 0.0) or 0.0)
+    return {
+        "compute_s": flops / hw.PEAK_FLOPS_BF16,
+        "memory_s": nbytes / hw.HBM_BW,
+        "collective_s": coll_bytes / hw.ICI_BW_PER_LINK,
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": nbytes,
+        "collective_bytes_per_device": coll_bytes,
+        "chips": chips,
+    }
+
+
+def dominant_term(terms: dict) -> str:
+    vals = {"compute": terms["compute_s"], "memory": terms["memory_s"],
+            "collective": terms["collective_s"]}
+    return max(vals, key=vals.get)
+
+
+# ---------------------------------------------------------------------------
+# Analytic MODEL_FLOPS (useful-work accounting; DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+def model_flops(cfg, shape) -> float:
+    """6*N_active*D for training, 2*N_active*tokens for serving, plus the
+    attention term (full S^2 for dense, S*window for SWA, linear for
+    SSM/xLSTM whose compute is inside N)."""
+    counts = cfg.param_counts()
+    n_active = counts["active"]
+    s, gb = shape.seq_len, shape.global_batch
+    hd = cfg.resolved_head_dim
+    nq = cfg.num_heads
+    attn_layers = sum(1 for i in range(cfg.num_layers)
+                      if cfg.layer_kind(i) == "attn")
+    attn_layers += cfg.encoder_layers
+
+    if shape.kind == "train":
+        tokens = gb * s
+        kv = min(s, cfg.sliding_window) if cfg.sliding_window else s
+        attn = 3 * (4.0 * gb * nq * s * kv * hd) * attn_layers
+        return 6.0 * n_active * tokens + attn
+    if shape.kind == "prefill":
+        tokens = gb * s
+        kv = min(s, cfg.sliding_window) if cfg.sliding_window else s
+        attn = (4.0 * gb * nq * s * kv * hd) * attn_layers
+        return 2.0 * n_active * tokens + attn
+    # decode: one token against a seq_len cache
+    kv = min(s, cfg.sliding_window) if cfg.sliding_window else s
+    attn = (4.0 * gb * nq * 1 * kv * hd) * attn_layers
+    return 2.0 * n_active * gb + attn
+
+
+def summarize_cell(arch, shape_name, mesh_name, chips, cost, coll,
+                   mflops) -> dict:
+    terms = roofline_terms(cost, coll["total"], chips)
+    dom = dominant_term(terms)
+    hlo_global = terms["hlo_flops_per_device"] * chips
+    return {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "chips": chips,
+        **{k: terms[k] for k in ("compute_s", "memory_s", "collective_s")},
+        "dominant": dom,
+        "hlo_flops_per_device": terms["hlo_flops_per_device"],
+        "hlo_bytes_per_device": terms["hlo_bytes_per_device"],
+        "collective_bytes_per_device": terms["collective_bytes_per_device"],
+        "collective_counts": coll.get("counts", {}),
+        "model_flops": mflops,
+        "useful_ratio": (mflops / hlo_global) if hlo_global else float("nan"),
+    }

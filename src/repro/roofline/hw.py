@@ -1,0 +1,8 @@
+"""TPU v5e hardware constants for the roofline model (assignment-specified)."""
+
+PEAK_FLOPS_BF16 = 197e12     # FLOP/s per chip
+PEAK_OPS_INT8 = 394e12       # int8 ops/s per chip (2x bf16)
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW_PER_LINK = 50e9       # bytes/s per ICI link
+HBM_PER_CHIP = 16 * 2**30    # bytes
+VMEM_PER_CORE = 16 * 2**20   # bytes (block-spec sizing budget)

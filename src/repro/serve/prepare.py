@@ -1,0 +1,48 @@
+"""Offline conversion of trained/QAT params into deployed Sparq serving form.
+
+Every quantizable 2-D Dense ({kernel, w_step, a_step}) becomes its packed
+integer representation ({w_packed, col_sums, scales, zero-points}) via
+core.common.pack_dense_params.  MoE expert tensors (3-D) and embeddings keep
+fake-quant serving (DESIGN.md §5).  Optionally weights are ALSO bit-dense
+stored (ops.dense_store_weights) for the decode memory-bound path.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+def _is_packable(node) -> bool:
+    return (isinstance(node, dict) and "kernel" in node and "w_step" in node
+            and hasattr(node["kernel"], "ndim") and node["kernel"].ndim == 2)
+
+
+def prepare_serving_params(params, cfg):
+    """Recursively pack all quantizable Dense leaves."""
+    if not cfg.quant.enabled:
+        return params
+
+    def walk(node):
+        if _is_packable(node):
+            return common.pack_dense_params(node, cfg.quant)
+        if isinstance(node, dict):
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk(v) for v in node]
+        if isinstance(node, tuple):
+            return tuple(walk(v) for v in node)
+        return node
+
+    return walk(params)
+
+
+def serving_param_bytes(params) -> int:
+    """HBM bytes of a serving param tree (for the memory roofline term)."""
+    import jax
+    total = 0
+    for leaf in jax.tree.leaves(params):
+        if hasattr(leaf, "size") and hasattr(leaf, "dtype"):
+            total += leaf.size * jnp.dtype(leaf.dtype).itemsize
+    return total

@@ -1,0 +1,82 @@
+"""Dry-run machinery: lower a production cell in a 512-device subprocess,
+parse collective bytes from compiled HLO, applicability matrix."""
+
+import json
+import subprocess
+import sys
+
+import pytest
+
+from repro import configs
+from repro.launch import shapes as shp
+
+
+class TestApplicability:
+    def test_cell_count(self):
+        live = sum(shp.cell_is_live(a, s)[0]
+                   for a in configs.ARCH_NAMES for s in shp.SHAPES)
+        skipped = 40 - live
+        assert live == 34 and skipped == 6   # DESIGN.md §5
+
+    def test_long_context_archs_run_500k(self):
+        for a in shp.LONG_CONTEXT_ARCHS:
+            assert shp.cell_is_live(a, "long_500k")[0]
+
+    def test_full_attention_archs_skip_500k(self):
+        assert not shp.cell_is_live("stablelm-1.6b", "long_500k")[0]
+        assert not shp.cell_is_live("qwen2-vl-2b", "long_500k")[0]
+
+
+class TestInputSpecs:
+    @pytest.mark.parametrize("arch", configs.ARCH_NAMES)
+    def test_specs_exist_for_all_live_cells(self, arch):
+        cfg = configs.get_config(arch)
+        for s in shp.SHAPES:
+            if not shp.cell_is_live(arch, s)[0]:
+                continue
+            specs = shp.input_specs(cfg, s)
+            assert specs, (arch, s)
+
+    def test_train_spec_shapes(self):
+        cfg = configs.get_config("stablelm-1.6b")
+        b = shp.input_specs(cfg, "train_4k")
+        assert b["tokens"].shape == (256, 4096)
+
+    def test_decode_spec_has_full_length_cache(self):
+        cfg = configs.get_config("granite-3-8b")
+        specs = shp.input_specs(cfg, "decode_32k")
+        k = specs["caches"][0]["attn"]["k"]
+        assert k.shape == (128, 32768, 8, 128)
+
+    def test_swa_decode_cache_is_window_bounded(self):
+        cfg = configs.get_config("mixtral-8x7b")
+        specs = shp.input_specs(cfg, "long_500k")
+        k = specs["caches"][0]["attn"]["k"]
+        assert k.shape[1] == 4096   # ring buffer, not 524288
+
+
+@pytest.mark.slow
+def test_lower_one_cell_subprocess():
+    """End-to-end: 512 fake devices, production mesh, full lowering of one
+    live cell (the compile sweep covers the rest)."""
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "seamless-m4t-medium", "--shape", "decode_32k", "--lower-only"],
+        capture_output=True, text=True, timeout=900,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"})
+    assert "LOWER_OK" in r.stdout, (r.stdout[-1500:], r.stderr[-1500:])
+
+
+class TestCollectiveParse:
+    def test_parse_known_lines(self):
+        from repro.roofline import analysis
+        hlo = """
+  %all-reduce.1 = bf16[16,4096]{1,0} all-reduce(%add.5), channel_id=1, replica_groups=[16,16]<=[256], use_global_device_ids=true, to_apply=%sum
+  %ag = f32[256,1024]{1,0} all-gather(%p0), channel_id=2, replica_groups=[16,16]<=[256], dimensions={0}
+  %rs = f32[16,64]{1,0} reduce-scatter(%p1), channel_id=3, replica_groups=[4,4]<=[16], to_apply=%sum
+"""
+        out = analysis.collective_bytes(hlo)
+        assert out["counts"]["all-reduce"] == 1
+        assert out["all-reduce"] == 16 * 4096 * 2
+        assert out["all-gather"] == 256 * 1024 * 4 // 16
+        assert out["reduce-scatter"] == 16 * 64 * 4 * 4

@@ -1,0 +1,105 @@
+"""Fault tolerance: checkpoint/restart resume equality, preemption save,
+straggler detection — simulated on CPU with a tiny model."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.quant import QuantConfig
+from repro.data.pipeline import DataConfig
+from repro.train.loop import TrainLoopConfig, Trainer
+
+
+def tiny_cfg():
+    return configs.get_config("stablelm-1.6b", reduced=True).replace(
+        num_layers=1, d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+        vocab_size=128, param_dtype="float32", compute_dtype="float32",
+        quant=QuantConfig(enabled=False))
+
+
+def data_cfg(cfg):
+    return DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=4,
+                      seed=11)
+
+
+def test_crash_resume_is_bit_identical(tmp_path):
+    """Train 20 steps straight vs 10 steps, 'crash', resume to 20 —
+    final params must match exactly (data+optimizer+step all restored)."""
+    cfg = tiny_cfg()
+
+    loop_a = TrainLoopConfig(total_steps=20, checkpoint_every=100,
+                             checkpoint_dir=str(tmp_path / "a"),
+                             log_every=100, async_checkpoint=False)
+    t_a = Trainer(cfg, loop_a, data_cfg(cfg), seed=5)
+    state_a, _ = t_a.run()
+
+    loop_b = TrainLoopConfig(total_steps=10, checkpoint_every=10,
+                             checkpoint_dir=str(tmp_path / "b"),
+                             log_every=100, async_checkpoint=False)
+    t_b = Trainer(cfg, loop_b, data_cfg(cfg), seed=5)
+    t_b.run()  # writes checkpoint at step 10, then "crashes" (process ends)
+
+    loop_b2 = TrainLoopConfig(total_steps=20, checkpoint_every=100,
+                              checkpoint_dir=str(tmp_path / "b"),
+                              log_every=100, async_checkpoint=False)
+    t_b2 = Trainer(cfg, loop_b2, data_cfg(cfg), seed=5)
+    state_b, _ = t_b2.run()
+
+    for xa, xb in zip(jax.tree.leaves(state_a["params"]),
+                      jax.tree.leaves(state_b["params"])):
+        np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+
+
+def test_preemption_triggers_checkpoint(tmp_path):
+    cfg = tiny_cfg()
+    loop = TrainLoopConfig(total_steps=50, checkpoint_every=1000,
+                           checkpoint_dir=str(tmp_path), log_every=100,
+                           async_checkpoint=False)
+    t = Trainer(cfg, loop, data_cfg(cfg), seed=1)
+    # simulate SIGTERM arriving after construction
+    t._preempted = True
+    state, stopped_at = t.run()
+    assert stopped_at == 1          # stopped at first boundary
+    from repro.train import checkpoint
+    assert checkpoint.latest_step(tmp_path) == 1
+
+
+def test_straggler_detection(tmp_path):
+    cfg = tiny_cfg()
+    events = []
+    loop = TrainLoopConfig(total_steps=12, checkpoint_every=1000,
+                           checkpoint_dir=str(tmp_path), log_every=100,
+                           straggler_factor=2.0, async_checkpoint=False)
+    t = Trainer(cfg, loop, data_cfg(cfg), seed=2,
+                straggler_cb=events.append)
+    # inject a slow step by wrapping the step function
+    orig = t.step_fn
+    calls = {"n": 0}
+
+    def slow_step(state, batch):
+        calls["n"] += 1
+        if calls["n"] == 10:
+            import time
+            time.sleep(1.0)
+        return orig(state, batch)
+
+    t.step_fn = slow_step
+    t.run()
+    assert any(e["step"] == 9 for e in events), events
+
+
+def test_metrics_drop_during_training(tmp_path):
+    """Loss on the motif-structured stream should drop measurably."""
+    cfg = tiny_cfg()
+    loop = TrainLoopConfig(total_steps=60, checkpoint_every=1000,
+                           checkpoint_dir=str(tmp_path), log_every=5,
+                           async_checkpoint=False)
+    t = Trainer(cfg, loop, data_cfg(cfg), seed=3,
+                train_step_kwargs={"peak_lr": 3e-3, "warmup_steps": 10,
+                                   "total_steps": 60})
+    t.run()
+    first = t.metrics_log[0]["loss"]
+    last = t.metrics_log[-1]["loss"]
+    assert last < first - 0.1, (first, last)

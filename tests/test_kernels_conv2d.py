@@ -1,0 +1,74 @@
+"""Pallas ulppack_conv2d / int_conv2d vs the lax conv oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import packing
+from repro.core.packing import PackSpec
+from repro.kernels import ops, ref
+from repro.kernels.ulppack_conv2d import int_conv2d, ulppack_conv2d
+
+
+def lattice(rng, shape, bits):
+    return jnp.asarray(rng.integers(0, 2**bits, size=shape), jnp.int32)
+
+
+CASES = [
+    # (spec, N, H, W, C, Fh, Fw, Co)
+    (PackSpec(1, 1, jnp.int16.dtype), 1, 12, 12, 8, 3, 3, 5),
+    (PackSpec(2, 2, jnp.int16.dtype), 2, 10, 9, 16, 3, 3, 8),
+    (PackSpec(3, 3, jnp.int16.dtype), 1, 9, 9, 6, 7, 7, 4),
+    (PackSpec(1, 1, jnp.int8.dtype), 1, 11, 8, 10, 5, 5, 3),
+]
+
+
+class TestPackedConv2d:
+    @pytest.mark.parametrize("spec,n,h,w,c,fh,fw,co", CASES,
+                             ids=lambda v: str(v))
+    def test_exact_valid(self, spec, n, h, w, c, fh, fw, co):
+        rng = np.random.default_rng(c * 7 + fh)
+        q_x = lattice(rng, (n, h, w, c), spec.a_bits)
+        q_w = lattice(rng, (fh, fw, c, co), spec.w_bits)
+        xp = packing.pack_activations(q_x, spec, axis=-1)
+        wp = packing.pack_weights(q_w, spec, axis=2)
+        got = ulppack_conv2d(xp, wp, spec, block_co=4, padding="VALID",
+                             interpret=True)
+        want = ref.conv2d_i32_ref(q_x, q_w, padding="VALID")
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_exact_same_padding(self):
+        spec = PackSpec(2, 2, jnp.int16.dtype)
+        rng = np.random.default_rng(0)
+        q_x = lattice(rng, (1, 8, 8, 4), spec.a_bits)
+        q_w = lattice(rng, (3, 3, 4, 6), spec.w_bits)
+        xp = packing.pack_activations(q_x, spec, axis=-1)
+        wp = packing.pack_weights(q_w, spec, axis=2)
+        got = ulppack_conv2d(xp, wp, spec, block_co=3, padding="SAME",
+                             interpret=True)
+        want = ref.conv2d_i32_ref(q_x, q_w, padding="SAME")
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_xla_backend_agrees(self):
+        spec = PackSpec(2, 2, jnp.int16.dtype)
+        rng = np.random.default_rng(2)
+        q_x = lattice(rng, (2, 9, 9, 8), spec.a_bits)
+        q_w = lattice(rng, (3, 3, 8, 5), spec.w_bits)
+        xp = packing.pack_activations(q_x, spec, axis=-1)
+        wp = packing.pack_weights(q_w, spec, axis=2)
+        a = ops.packed_conv2d(xp, wp, spec, padding="VALID",
+                              backend="pallas")
+        b = ops.packed_conv2d(xp, wp, spec, padding="VALID", backend="xla")
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestIntConv2d:
+    def test_exact(self):
+        rng = np.random.default_rng(4)
+        q_x = jnp.asarray(rng.integers(-200, 200, (1, 10, 10, 7)), jnp.int16)
+        q_w = jnp.asarray(rng.integers(-200, 200, (3, 3, 7, 5)), jnp.int16)
+        got = int_conv2d(q_x, q_w, block_co=5, padding="VALID",
+                         interpret=True)
+        want = ref.conv2d_i32_ref(q_x.astype(jnp.int32),
+                                  q_w.astype(jnp.int32), padding="VALID")
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -1,0 +1,153 @@
+"""Packing algebra: round-trips, overflow-region tightness, reference matmul."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packing
+from repro.core.packing import PackSpec, k_tile_bound
+
+
+def lattice(rng, shape, bits):
+    return jnp.asarray(rng.integers(0, 2**bits, size=shape), jnp.int32)
+
+
+class TestBounds:
+    def test_paper_lp_region_matches_n_plus_m_le_7(self):
+        # Paper §IV-A: 16-bit packed registers usable iff N+M <= 7.
+        for w in range(1, 5):
+            for a in range(1, 5):
+                spec = PackSpec(w, a, jnp.int16.dtype)
+                if w + a <= 7:
+                    assert spec.feasible, (w, a)
+                else:
+                    assert not spec.feasible, (w, a)
+
+    def test_known_k_tiles_s8(self):
+        assert k_tile_bound(1, 1, 8) == 127
+        assert k_tile_bound(2, 2, 8) == 14
+        assert k_tile_bound(3, 3, 8) == 2
+        assert k_tile_bound(4, 3, 8) == 1
+        assert k_tile_bound(4, 4, 8) == 0
+
+    def test_int8_ulp_region(self):
+        # 8-bit lanes (S=4): the paper's ULP regime; only ~binary works.
+        assert PackSpec(1, 1, jnp.int8.dtype).feasible
+        assert PackSpec(1, 1, jnp.int8.dtype).k_tile == 7
+        assert not PackSpec(2, 2, jnp.int8.dtype).feasible
+
+    def test_p4_binary_extension(self):
+        spec = PackSpec(1, 1, jnp.int16.dtype, n_pack=4)
+        assert spec.feasible
+        assert spec.k_tile >= 3
+
+
+class TestPackUnpack:
+    @given(st.integers(1, 4), st.integers(1, 4), st.integers(1, 3),
+           st.integers(2, 64))
+    @settings(max_examples=30, deadline=None)
+    def test_roundtrip_activations(self, w_bits, a_bits, rows, k):
+        spec = PackSpec(max(w_bits, 1), a_bits, jnp.int16.dtype)
+        rng = np.random.default_rng(k * 31 + rows)
+        q = lattice(rng, (rows, k), a_bits)
+        packed = packing.pack_activations(q, spec, axis=-1)
+        assert packed.dtype == spec.lane_dtype
+        back = packing.unpack(packed, spec, axis=-1)
+        np.testing.assert_array_equal(np.asarray(back[:, :k]), np.asarray(q))
+
+    @given(st.integers(1, 4), st.integers(2, 64), st.integers(1, 8))
+    @settings(max_examples=30, deadline=None)
+    def test_roundtrip_weights_reversed(self, w_bits, k, n):
+        spec = PackSpec(w_bits, 1, jnp.int16.dtype)
+        rng = np.random.default_rng(k * 7 + n)
+        q = lattice(rng, (k, n), w_bits)
+        packed = packing.pack_weights(q, spec, axis=0)
+        back = packing.unpack(packed, spec, axis=0, reversed_fields=True)
+        np.testing.assert_array_equal(np.asarray(back[:k]), np.asarray(q))
+
+    def test_p4_roundtrip(self):
+        spec = PackSpec(1, 1, jnp.int16.dtype, n_pack=4)
+        rng = np.random.default_rng(0)
+        q = lattice(rng, (5, 12), 1)
+        packed = packing.pack_activations(q, spec, axis=-1)
+        assert packed.shape == (5, 3)
+        back = packing.unpack(packed, spec, axis=-1)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(q))
+
+
+class TestSingleLaneAlgebra:
+    def test_middle_band_is_dot(self):
+        spec = PackSpec(3, 3, jnp.int16.dtype)
+        a0, a1, w0, w1 = 5, 7, 3, 6
+        a = jnp.asarray([[a0, a1]], jnp.int32)
+        w = jnp.asarray([[w0], [w1]], jnp.int32)
+        ap = packing.pack_activations(a, spec, -1)
+        wp = packing.pack_weights(w, spec, 0)
+        total = ap.astype(jnp.int32) * wp.astype(jnp.int32)[0]
+        d = packing.extract_dot(total, spec)
+        assert int(d[0, 0]) == a0 * w0 + a1 * w1
+
+
+class TestTileBoundTightness:
+    @pytest.mark.parametrize("w_bits,a_bits", [(1, 1), (2, 2), (3, 2), (3, 3)])
+    def test_at_bound_exact(self, w_bits, a_bits):
+        """Accumulating exactly k_tile worst-case lanes still extracts D."""
+        spec = PackSpec(w_bits, a_bits, jnp.int16.dtype)
+        kt = spec.k_tile
+        k = 2 * kt
+        # Worst case: all operands at max lattice value.
+        q_a = jnp.full((1, k), spec.max_a, jnp.int32)
+        q_w = jnp.full((k, 1), spec.max_w, jnp.int32)
+        ap = packing.pack_activations(q_a, spec, -1)
+        wp = packing.pack_weights(q_w, spec, 0)
+        total = jnp.sum(ap.astype(jnp.int32)[0] * wp.astype(jnp.int32)[:, 0])
+        d = packing.extract_dot(total, spec)
+        assert int(d) == k * spec.max_a * spec.max_w
+
+    @pytest.mark.parametrize("w_bits,a_bits", [(1, 1), (2, 2), (3, 3)])
+    def test_beyond_bound_corrupts(self, w_bits, a_bits):
+        """The k_tile bound is tight: one extra worst-case lane corrupts D
+        (this is the overflow the paper's Fig. 5 region boundary encodes)."""
+        spec = PackSpec(w_bits, a_bits, jnp.int16.dtype)
+        k = 2 * (spec.k_tile + 1)
+        q_a = jnp.full((1, k), spec.max_a, jnp.int32)
+        q_w = jnp.full((k, 1), spec.max_w, jnp.int32)
+        ap = packing.pack_activations(q_a, spec, -1)
+        wp = packing.pack_weights(q_w, spec, 0)
+        total = jnp.sum(ap.astype(jnp.int32)[0] * wp.astype(jnp.int32)[:, 0])
+        d = packing.extract_dot(total, spec)
+        assert int(d) != k * spec.max_a * spec.max_w
+
+
+class TestPackedMatmulReference:
+    @pytest.mark.parametrize("w_bits,a_bits,lane", [
+        (1, 1, "int8"), (1, 1, "int16"), (2, 2, "int16"), (3, 2, "int16"),
+        (3, 3, "int16"), (4, 3, "int16"), (2, 1, "int8"),
+    ])
+    def test_exact_vs_int_matmul(self, w_bits, a_bits, lane):
+        from repro.kernels import ref
+        spec = PackSpec(w_bits, a_bits, jnp.dtype(lane))
+        rng = np.random.default_rng(42)
+        q_a = lattice(rng, (9, 67), a_bits)
+        q_w = lattice(rng, (67, 13), w_bits)
+        got = packing.packed_matmul_reference(q_a, q_w, spec)
+        want = ref.matmul_i32_ref(q_a, q_w)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_p4_exact(self):
+        from repro.kernels import ref
+        spec = PackSpec(1, 1, jnp.int16.dtype, n_pack=4)
+        rng = np.random.default_rng(3)
+        q_a = lattice(rng, (4, 50), 1)
+        q_w = lattice(rng, (50, 6), 1)
+        got = packing.packed_matmul_reference(q_a, q_w, spec)
+        want = ref.matmul_i32_ref(q_a, q_w)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_infeasible_raises(self):
+        spec = PackSpec(4, 4, jnp.int16.dtype)
+        with pytest.raises(ValueError):
+            packing.packed_matmul_reference(
+                jnp.zeros((2, 4), jnp.int32), jnp.zeros((4, 2), jnp.int32),
+                spec)
