@@ -17,10 +17,17 @@ def wall_us(fn, *args, iters: int = 5, warmup: int = 2) -> float:
     return (time.perf_counter() - t0) / iters * 1e6
 
 
+def normalize_cost(c) -> dict:
+    """cost_analysis() returns a dict, a per-device list of dicts, or None
+    depending on jax version/backend — normalize to one dict."""
+    if isinstance(c, (list, tuple)):
+        c = c[0] if c else None
+    return c or {}
+
+
 def cost_of(fn, *args) -> dict:
     """flops / bytes accessed of the jitted fn at these args."""
-    c = jax.jit(fn).lower(*args).compile().cost_analysis()
-    c = c or {}
+    c = normalize_cost(jax.jit(fn).lower(*args).compile().cost_analysis())
     return {"flops": float(c.get("flops", 0.0) or 0.0),
             "bytes": float(c.get("bytes accessed", 0.0) or 0.0)}
 

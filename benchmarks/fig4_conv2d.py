@@ -24,6 +24,8 @@ from benchmarks.common import cost_of, emit, wall_us
 from repro.core import packing, vmacsr
 from repro.core.packing import PackSpec
 from repro.kernels import ops, ref
+from repro.kernels import plan as plan_lib
+from repro.kernels.ulppack_conv2d import ulppack_conv2d
 
 H = W = 256
 CIN = 32
@@ -92,9 +94,13 @@ def run(quick: bool = False):
         xp = packing.pack_activations(q_x, spec, axis=-1)
         wp = packing.pack_weights(q_w, spec, axis=2)
 
-        def packed(xp, wp, spec=spec):
+        plan = plan_lib.plan_packed_conv2d(
+            tuple(xp.shape), tuple(wp.shape), spec, padding="VALID",
+            backend="xla")
+
+        def packed(xp, wp, spec=spec, plan=plan):
             return ops.packed_conv2d(xp, wp, spec, padding="VALID",
-                                     backend="xla")
+                                     plan=plan)
 
         c = cost_of(packed, xp, wp)
         us = wall_us(packed, xp, wp, iters=3)
@@ -117,12 +123,58 @@ def run(quick: bool = False):
             "modeled_speedup": round(modeled, 2),
             "measured_speedup": round(base_us / us, 2),
             "paper_speedup": paper.get(name, ""),
+            "plan": str(plan),
         })
 
     emit(rows, ["impl", "w_bits", "a_bits", "wall_us", "hlo_flops",
                 "useful_macs", "instr_per_k", "modeled_speedup",
-                "measured_speedup", "paper_speedup"])
+                "measured_speedup", "paper_speedup", "plan"])
+    _sweep_block_h(rng, h, w, quick)
     return rows
+
+
+def _sweep_block_h(rng, h, w, quick):
+    """Spatial-tiling sweep of the Pallas kernel (W2A2, both weight stores).
+
+    Shows the VMEM-boundedness of the tiled schedule: working set scales
+    with block_h, not the image, while staying bit-exact (the plan's own
+    estimate is reported alongside measured wall time).
+    """
+    spec = PackSpec(2, 2, jnp.int16.dtype)
+    q_x = _lattice(rng, (1, h, w, CIN), spec.a_bits)
+    q_w = _lattice(rng, (FH, FW, CIN, COUT), spec.w_bits)
+    xp = packing.pack_activations(q_x, spec, axis=-1)
+    wp = packing.pack_weights(q_w, spec, axis=2)
+    wd = ops.dense_store_conv_weights(q_w, spec.w_bits)
+    out_h = h - FH + 1
+    blocks = [8, 32] if quick else [16, 64, 256]
+    rows = []
+    for store, wt in (("lanes", wp), ("dense", wd)):
+        for bh in blocks + [None]:
+            plan = plan_lib.plan_packed_conv2d(
+                tuple(xp.shape), tuple(wt.shape), spec, padding="VALID",
+                backend="pallas", weight_store=store,
+                k_full=CIN if store == "dense" else None, block_h=bh)
+
+            def tiled(xp, wt, plan=plan):
+                return ulppack_conv2d(
+                    xp, wt, plan.spec, block_h=plan.block_h,
+                    block_co=plan.block_co, padding="VALID",
+                    interpret=plan.interpret, weight_store=plan.weight_store,
+                    k_full=plan.k_full)
+
+            us = wall_us(tiled, xp, wt, iters=1, warmup=1)
+            rows.append({
+                "weight_store": store,
+                "block_h": plan.block_h,
+                "tiles": -(-out_h // plan.block_h),
+                "vmem_bytes": plan.vmem_bytes,
+                "vmem_frac": round(plan.vmem_fraction, 4),
+                "wall_us": round(us, 1),
+                "plan": str(plan),
+            })
+    emit(rows, ["weight_store", "block_h", "tiles", "vmem_bytes",
+                "vmem_frac", "wall_us", "plan"])
 
 
 if __name__ == "__main__":

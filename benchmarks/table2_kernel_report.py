@@ -21,10 +21,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, normalize_cost
 from repro.core.packing import PackSpec
 from repro.kernels import ops
-from repro.roofline import hw
+from repro.kernels import plan as plan_lib
 
 M, K, N = 8, 2048, 2048   # decode-shaped linear
 
@@ -33,7 +33,7 @@ def _census(fn, *args):
     txt = jax.jit(fn).lower(*args).compile().as_text()
     fl = len(re.findall(r"\b(f32|bf16|f16)\[", txt))
     it = len(re.findall(r"\b(s8|s16|s32|u8|u16|u32)\[", txt))
-    c = jax.jit(fn).lower(*args).compile().cost_analysis() or {}
+    c = normalize_cost(jax.jit(fn).lower(*args).compile().cost_analysis())
     return {"float_type_mentions": fl, "int_type_mentions": it,
             "flops": float(c.get("flops", 0) or 0),
             "bytes": float(c.get("bytes accessed", 0) or 0)}
@@ -94,17 +94,23 @@ def run(quick: bool = False):
                  "intensity_flops_per_byte": "",
                  "weight_bytes": dense_words.size * 4})
 
-    # kernel VMEM working sets (BlockSpec budget vs 16 MiB v5e VMEM)
-    bm, bn, chunks = 128, 128, 8
-    kt = spec.k_tile
-    bk = chunks * kt
-    vmem = (bm * bk + bk * bn) * 2 + (chunks + 1) * bm * bn * 4
-    rows.append({"path": f"pallas-matmul-blockspec bm={bm} bn={bn} bk={bk}",
-                 "float_type_mentions": 0, "int_type_mentions": 0,
-                 "flops": 0, "bytes": vmem,
-                 "intensity_flops_per_byte":
-                     f"vmem_frac={vmem / hw.VMEM_PER_CORE:.3f}",
-                 "weight_bytes": ""})
+    # kernel VMEM working sets: the planner's chosen plans vs the 16 MiB
+    # v5e budget (plan.py sizes every BlockSpec offline)
+    kp = -(-K // spec.n_pack)
+    mm_plan = plan_lib.plan_packed_matmul(M, kp, N, spec, backend="pallas")
+    conv_plan = plan_lib.plan_packed_conv2d(
+        (1, 256, 256, 16), (7, 7, 16, 32), spec, padding="VALID",
+        backend="pallas")
+    conv_dense_plan = plan_lib.plan_packed_conv2d(
+        (1, 256, 256, 16), (7, 7, 2, 32), spec, padding="VALID",
+        backend="pallas", weight_store="dense", k_full=32)
+    for plan in (mm_plan, conv_plan, conv_dense_plan):
+        rows.append({"path": str(plan),
+                     "float_type_mentions": 0, "int_type_mentions": 0,
+                     "flops": 0, "bytes": plan.vmem_bytes,
+                     "intensity_flops_per_byte":
+                         f"vmem_frac={plan.vmem_fraction:.3f}",
+                     "weight_bytes": ""})
 
     emit(rows, ["path", "flops", "bytes", "intensity_flops_per_byte",
                 "float_type_mentions", "int_type_mentions", "weight_bytes"])

@@ -59,6 +59,13 @@ class PackSpec:
         if self.n_pack == 4 and self.lane_dtype != jnp.int16.dtype:
             raise ValueError("P4 packing is only defined for int16 lanes")
 
+    @classmethod
+    def from_config(cls, qcfg) -> "PackSpec":
+        """Build from a QuantConfig-like object (w_bits, a_bits, lane_dtype,
+        n_pack) — the one blessed conversion, shared by every layer."""
+        return cls(qcfg.w_bits, qcfg.a_bits, jnp.dtype(qcfg.lane_dtype),
+                   qcfg.n_pack)
+
     @property
     def shift(self) -> int:
         if self.n_pack == 2:

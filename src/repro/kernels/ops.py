@@ -1,4 +1,11 @@
-"""Public kernel API: backend-dispatched packed ops + affine-corrected linear.
+"""Public kernel API: plan-dispatched packed ops + affine-corrected linear.
+
+Every entry point routes through a ``KernelPlan`` (kernels/plan.py): callers
+either pass a prebuilt per-layer plan (the deployed path — serve/prepare.py
+and models/cnn.py build plans once at preparation time) or a plan is looked
+up from the memoized planners on first use for a shape signature.  The
+'pallas' and 'xla' implementations of each op are entries in the plan
+module's backend registry — there is no ad-hoc backend resolution here.
 
 ``backend``:
   'pallas'  — the fused TPU kernels (interpret=True on CPU): the Sparq path.
@@ -6,7 +13,7 @@
               "native ULPPACK on stock hardware" path, also used inside jitted
               multi-device step functions where a python-gridded interpret
               kernel would be prohibitively slow on CPU.
-  'auto'    — pallas on TPU, xla elsewhere.
+  'auto'    — pallas on TPU, xla elsewhere (resolved by the planner).
 
 Both backends are bit-exact against kernels/ref.py oracles; tests enforce it.
 """
@@ -19,33 +26,58 @@ import numpy as np
 
 from repro.core import packing
 from repro.core.packing import PackSpec
+from repro.kernels import plan as plan_lib
 from repro.kernels import quant_pack as _quant_pack
 from repro.kernels import ulppack_conv2d as _conv
 from repro.kernels import ulppack_matmul as _matmul
+from repro.kernels.plan import KernelPlan
 
 
-def _resolve(backend: str) -> str:
-    if backend == "auto":
-        return "pallas" if jax.default_backend() == "tpu" else "xla"
-    return backend
-
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
+# ---------------------------------------------------------------------------
+# packed_matmul
+# ---------------------------------------------------------------------------
 
 def packed_matmul(a_packed, w_packed, spec: PackSpec, *,
-                  backend: str = "auto") -> jax.Array:
-    """[.., Kp] x [Kp, N] -> exact s32 dot of the underlying lattices."""
-    backend = _resolve(backend)
+                  backend: str = "auto", weight_store: str = "lanes",
+                  k_full: int | None = None,
+                  plan: KernelPlan | None = None) -> jax.Array:
+    """[.., Kp] x [Kp, N] -> exact s32 dot of the underlying lattices.
+
+    With ``weight_store='dense'`` (or a dense plan) ``w_packed`` is bit-dense
+    int32 words [ceil(k_full/per), N] and ``k_full`` is the unpacked K.
+    """
     lead = a_packed.shape[:-1]
     a2 = a_packed.reshape(-1, a_packed.shape[-1])
-    if backend == "pallas":
-        out = _matmul.ulppack_matmul(a2, w_packed, spec,
-                                     interpret=_interpret())
-    else:
-        out = _xla_packed_matmul(a2, w_packed, spec)
+    if plan is None:
+        plan = plan_lib.plan_packed_matmul(
+            a2.shape[0], a2.shape[1], w_packed.shape[-1], spec,
+            backend=backend, weight_store=weight_store, k_full=k_full)
+    out = plan_lib.dispatch(plan, a2, w_packed)
     return out.reshape(*lead, w_packed.shape[-1])
+
+
+def _dense_to_lanes(words, spec: PackSpec, k_full: int):
+    """Expand bit-dense weight words [Kw, N] -> P1 lanes [Kp, N]."""
+    q_w = dense_load_weights(words, spec.w_bits, k_full)
+    return packing.pack_weights(q_w, spec, axis=0)
+
+
+@plan_lib.register_backend("packed_matmul", "pallas")
+def _packed_matmul_pallas(plan: KernelPlan, a2, w):
+    if plan.weight_store == "dense":
+        # Matmul keeps dense expansion at trace level (the HBM weight operand
+        # is still the dense words); the conv kernel does it in its prologue.
+        w = _dense_to_lanes(w, plan.spec, plan.k_full)
+    return _matmul.ulppack_matmul(
+        a2, w, plan.spec, block_m=plan.block_m, block_n=plan.block_n,
+        chunks=plan.chunks, interpret=plan.interpret)
+
+
+@plan_lib.register_backend("packed_matmul", "xla")
+def _packed_matmul_xla(plan: KernelPlan, a2, w):
+    if plan.weight_store == "dense":
+        w = _dense_to_lanes(w, plan.spec, plan.k_full)
+    return _xla_packed_matmul(a2, w, plan.spec)
 
 
 def _xla_packed_matmul(a_packed, w_packed, spec: PackSpec,
@@ -90,35 +122,76 @@ def _xla_packed_matmul(a_packed, w_packed, spec: PackSpec,
     return out
 
 
+# ---------------------------------------------------------------------------
+# quantize_pack
+# ---------------------------------------------------------------------------
+
 def quantize_pack(x, scale, zero_point, spec: PackSpec, *,
-                  backend: str = "auto"):
+                  backend: str = "auto", plan: KernelPlan | None = None):
     """Quantize + P1-pack activations along the last axis; also row sums."""
-    backend = _resolve(backend)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    if backend == "pallas":
-        packed, rs = _quant_pack.quantize_pack(x2, scale, zero_point, spec,
-                                               interpret=_interpret())
-    else:
-        from repro.core import quant
-        q = quant.quantize_affine(x2, scale, zero_point, spec.a_bits)
-        packed = packing.pack_activations(q, spec, axis=-1)
-        rs = jnp.sum(q, axis=-1, keepdims=True).astype(jnp.int32)
+    if plan is None:
+        plan = plan_lib.plan_quantize_pack(x2.shape[0], x2.shape[1], spec,
+                                           backend=backend)
+    packed, rs = plan_lib.dispatch(plan, x2, scale, zero_point)
     kp = packed.shape[-1]
     return packed.reshape(*lead, kp), rs.reshape(*lead, 1)
 
 
+@plan_lib.register_backend("quantize_pack", "pallas")
+def _quantize_pack_pallas(plan: KernelPlan, x2, scale, zero_point):
+    return _quant_pack.quantize_pack(
+        x2, scale, zero_point, plan.spec, block_m=plan.block_m,
+        block_k=plan.block_k, interpret=plan.interpret)
+
+
+@plan_lib.register_backend("quantize_pack", "xla")
+def _quantize_pack_xla(plan: KernelPlan, x2, scale, zero_point):
+    from repro.core import quant
+    q = quant.quantize_affine(x2, scale, zero_point, plan.spec.a_bits)
+    packed = packing.pack_activations(q, plan.spec, axis=-1)
+    rs = jnp.sum(q, axis=-1, keepdims=True).astype(jnp.int32)
+    return packed, rs
+
+
+# ---------------------------------------------------------------------------
+# packed_conv2d
+# ---------------------------------------------------------------------------
+
 def packed_conv2d(x_packed, w_packed, spec: PackSpec, *,
-                  padding: str = "SAME", backend: str = "auto"):
-    backend = _resolve(backend)
-    if backend == "pallas":
-        return _conv.ulppack_conv2d(x_packed, w_packed, spec,
-                                    padding=padding, interpret=_interpret())
-    return _xla_packed_conv2d(x_packed, w_packed, spec, padding)
+                  padding: str = "SAME", backend: str = "auto",
+                  weight_store: str = "lanes", k_full: int | None = None,
+                  plan: KernelPlan | None = None):
+    """Packed conv2d [N,H,W,Cp] x [Fh,Fw,Cdim,Co] -> s32 NHWC.
+
+    The spatial tiling (block_h) and weight-storage mode come from the plan;
+    see kernels/plan.py.  With ``weight_store='dense'`` the weight operand is
+    bit-dense words; pass ``k_full`` (= Cin) when it is not a multiple of
+    n_pack (the planner's default rounds up, which the zero-padded words
+    make equivalent).
+    """
+    if plan is None:
+        plan = plan_lib.plan_packed_conv2d(
+            tuple(x_packed.shape), tuple(w_packed.shape), spec,
+            padding=padding, backend=backend, weight_store=weight_store,
+            k_full=k_full)
+    return plan_lib.dispatch(plan, x_packed, w_packed, padding)
 
 
-def _xla_packed_conv2d(x_packed, w_packed, spec: PackSpec, padding):
-    """XLA packed conv: conv in packed space per k_tile chunk + extraction."""
+@plan_lib.register_backend("packed_conv2d", "pallas")
+def _packed_conv2d_pallas(plan: KernelPlan, x_packed, w_packed, padding):
+    return _conv.ulppack_conv2d(
+        x_packed, w_packed, plan.spec, block_h=plan.block_h,
+        block_co=plan.block_co, padding=padding, interpret=plan.interpret,
+        weight_store=plan.weight_store, k_full=plan.k_full)
+
+
+@plan_lib.register_backend("packed_conv2d", "xla")
+def _packed_conv2d_xla(plan: KernelPlan, x_packed, w_packed, padding):
+    spec = plan.spec
+    if plan.weight_store == "dense":
+        w_packed = _conv.expand_dense_taps(w_packed, spec, plan.k_full)
     kt = spec.k_tile
     cp = x_packed.shape[-1]
     out = None
@@ -134,33 +207,62 @@ def _xla_packed_conv2d(x_packed, w_packed, spec: PackSpec, padding):
     return out
 
 
-def int_matmul(q_a, q_w, *, backend: str = "auto"):
-    backend = _resolve(backend)
+# ---------------------------------------------------------------------------
+# int_matmul
+# ---------------------------------------------------------------------------
+
+def int_matmul(q_a, q_w, *, backend: str = "auto",
+               plan: KernelPlan | None = None):
     lead = q_a.shape[:-1]
     a2 = q_a.reshape(-1, q_a.shape[-1])
-    if backend == "pallas":
-        out = _matmul.int_matmul(a2, q_w, interpret=_interpret())
-    else:
-        out = jax.lax.dot_general(a2.astype(jnp.int32),
-                                  q_w.astype(jnp.int32),
-                                  (((1,), (0,)), ((), ())),
-                                  preferred_element_type=jnp.int32)
+    if plan is None:
+        plan = plan_lib.plan_int_matmul(a2.shape[0], a2.shape[1],
+                                        q_w.shape[-1], backend=backend)
+    out = plan_lib.dispatch(plan, a2, q_w)
     return out.reshape(*lead, q_w.shape[-1])
 
 
+@plan_lib.register_backend("int_matmul", "pallas")
+def _int_matmul_pallas(plan: KernelPlan, a2, q_w):
+    return _matmul.int_matmul(a2, q_w, block_m=plan.block_m,
+                              block_n=plan.block_n, block_k=plan.block_k,
+                              interpret=plan.interpret)
+
+
+@plan_lib.register_backend("int_matmul", "xla")
+def _int_matmul_xla(plan: KernelPlan, a2, q_w):
+    return jax.lax.dot_general(a2.astype(jnp.int32), q_w.astype(jnp.int32),
+                               (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# quantized_linear (the deployed Sparq linear)
+# ---------------------------------------------------------------------------
+
 def quantized_linear(x, w_packed, w_col_sums, a_scale, a_zp, w_scale, w_zp,
                      spec: PackSpec, *, bias=None, backend: str = "auto",
-                     out_dtype=jnp.float32):
+                     weight_store: str = "lanes",
+                     plan: KernelPlan | None = None, out_dtype=jnp.float32):
     """The deployed Sparq linear: runtime pack + packed matmul + dequant.
 
     x:          [..., K] float activations
-    w_packed:   [Kp, N] offline-packed weight lanes (field-reversed)
+    w_packed:   [Kp, N] offline-packed weight lanes (field-reversed), or
+                [Kw, N] bit-dense int32 words under weight_store='dense'
     w_col_sums: [N] s32 offline per-column lattice sums
     Returns float [..., N]  ==  quantized_linear_ref to float tolerance.
     """
     k = x.shape[-1]
-    a_packed, a_sums = quantize_pack(x, a_scale, a_zp, spec, backend=backend)
-    acc = packed_matmul(a_packed, w_packed, spec, backend=backend)
+    if plan is None:
+        rows = int(np.prod(x.shape[:-1])) if x.ndim > 1 else 1
+        kp = -(-k // spec.n_pack)
+        plan = plan_lib.plan_packed_matmul(
+            rows, kp, w_packed.shape[-1], spec, backend=backend,
+            weight_store=weight_store,
+            k_full=k if weight_store == "dense" else None)
+    a_packed, a_sums = quantize_pack(x, a_scale, a_zp, spec,
+                                     backend=plan.backend)
+    acc = packed_matmul(a_packed, w_packed, spec, plan=plan)
     acc = acc.astype(jnp.float32)
     corr = (acc
             - jnp.asarray(w_zp, jnp.float32) * a_sums.astype(jnp.float32)
@@ -176,21 +278,32 @@ def quantized_linear(x, w_packed, w_col_sums, a_scale, a_zp, w_scale, w_zp,
     return out.astype(out_dtype)
 
 
-def prepare_weights(w, w_scale, w_zp, spec: PackSpec):
-    """Offline weight path: quantize, pack (field-reversed), column sums."""
+# ---------------------------------------------------------------------------
+# Offline weight preparation
+# ---------------------------------------------------------------------------
+
+def prepare_weights(w, w_scale, w_zp, spec: PackSpec, *,
+                    weight_store: str = "lanes"):
+    """Offline weight path: quantize, pack (field-reversed), column sums.
+
+    ``weight_store='dense'`` stores the lattice bit-dense (int32 words,
+    true w_bits/value HBM footprint) instead of as P1 lanes.
+    """
     from repro.core import quant
     q_w = quant.quantize_affine(w, w_scale, w_zp, spec.w_bits)
-    packed = packing.pack_weights(q_w, spec, axis=0)
     col_sums = jnp.sum(q_w, axis=0).astype(jnp.int32)
-    return packed, col_sums
+    if weight_store == "dense":
+        return dense_store_weights(q_w, spec.w_bits), col_sums
+    return packing.pack_weights(q_w, spec, axis=0), col_sums
 
 
 # ---------------------------------------------------------------------------
 # Dense sub-byte weight storage (beyond-paper, §Perf memory-term
 # optimization): store w_bits-wide lattice values bit-dense in int32 words
 # (true w_bits/value HBM footprint) and expand to P1 lanes at use.  On TPU
-# the expansion lives in the Pallas kernel's VMEM prologue; the XLA fallback
-# materializes the lanes (still saving HBM reads of the weight tensor).
+# the conv2d expansion lives in the Pallas kernel's VMEM prologue
+# (ulppack_conv2d.expand_dense_taps); the matmul / XLA paths materialize the
+# lanes at trace level (still saving HBM reads of the weight tensor).
 # ---------------------------------------------------------------------------
 
 def dense_store_weights(q_w: jax.Array, w_bits: int) -> jax.Array:
@@ -212,3 +325,15 @@ def dense_load_weights(words: jax.Array, w_bits: int, k: int) -> jax.Array:
     parts = [(words >> (w_bits * j)) & mask for j in range(per)]
     q = jnp.stack(parts, axis=1).reshape(-1, words.shape[-1])
     return q[:k]
+
+
+def dense_store_conv_weights(q_w: jax.Array, w_bits: int) -> jax.Array:
+    """[Fh, Fw, Cin, Co] lattice -> [Fh, Fw, ceil(Cin/per), Co] int32 words.
+
+    Word-packs the input-channel axis independently per (fh, fw, co) tap, the
+    layout ulppack_conv2d's dense prologue expands.
+    """
+    fh, fw, cin, co = q_w.shape
+    flat = q_w.transpose(2, 0, 1, 3).reshape(cin, fh * fw * co)
+    words = dense_store_weights(flat, w_bits)
+    return words.reshape(-1, fh, fw, co).transpose(1, 2, 0, 3)

@@ -1,0 +1,300 @@
+"""Ahead-of-time kernel planning + backend registry (paper §IV philosophy).
+
+Sparq commits to one execution plan per layer *offline*: pack layout,
+shift-extract cadence and accumulator spill distance are all fixed before the
+first input arrives (same philosophy as FullPack's ahead-of-time lane layout
+planning).  This module is the TPU-side analogue: a ``KernelPlan`` is a frozen,
+hashable description of how one op will execute — backend, ``PackSpec``, tile
+sizes, and weight-storage mode — built once per layer by a planner that
+inspects shapes, the device, and the VMEM budget (DESIGN.md §11).
+
+Three pieces:
+
+  * ``KernelPlan``   — the frozen dataclass.  Hashable, so it can be an
+                       ``lru_cache`` key / jit static argument.
+  * planners         — ``plan_packed_matmul`` / ``plan_packed_conv2d`` /
+                       ``plan_quantize_pack`` / ``plan_int_matmul``.  All are
+                       ``lru_cache``d: a layer's plan is built exactly once per
+                       process for a given shape signature.
+  * backend registry — ``register_backend(op, backend)`` decorates an
+                       implementation; ``dispatch(plan, *args)`` routes a call.
+                       kernels/ops.py registers 'pallas' and 'xla' entries for
+                       every public op and contains no ad-hoc resolution.
+
+Weight-storage modes (``KernelPlan.weight_store``):
+  'lanes' — P1-packed lanes (spec.lane_dtype), the default deployed layout.
+  'dense' — bit-dense int32 words (true w_bits/value HBM footprint); the
+            conv2d Pallas kernel expands words -> P1 lanes in its VMEM
+            prologue, the XLA fallback expands at trace level.  ``k_full``
+            records the unpacked contraction length (K, or Cin for conv) the
+            expansion must recover.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.packing import PackSpec
+from repro.roofline import hw
+
+#: Fraction of per-core VMEM the planner will budget for one kernel's working
+#: set; the rest is headroom for double buffering and compiler temporaries.
+VMEM_FRACTION = 0.5
+
+_CONV_BLOCK_H_CANDIDATES = (256, 128, 64, 32, 16, 8, 4, 2, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPlan:
+    """Frozen per-layer execution plan; see module docstring.
+
+    Tile fields are populated per-op (``None`` where not applicable):
+      packed_matmul / int_matmul : block_m, block_n, chunks / block_k
+      packed_conv2d              : block_h, block_co
+      quantize_pack              : block_m, block_k
+    """
+
+    op: str
+    backend: str                      # 'pallas' | 'xla' (never 'auto')
+    spec: PackSpec | None = None
+    interpret: bool = True
+    weight_store: str = "lanes"       # 'lanes' | 'dense'
+    k_full: int | None = None         # unpacked K (dense expansion target)
+    block_m: int | None = None
+    block_n: int | None = None
+    block_k: int | None = None
+    chunks: int | None = None
+    block_h: int | None = None
+    block_co: int | None = None
+    vmem_bytes: int = 0               # planner working-set estimate
+
+    def __post_init__(self):
+        if self.backend not in ("pallas", "xla"):
+            raise ValueError(f"unresolved backend {self.backend!r}")
+        if self.weight_store not in ("lanes", "dense"):
+            raise ValueError(f"unknown weight_store {self.weight_store!r}")
+        if self.weight_store == "dense" and self.k_full is None:
+            raise ValueError("dense weight storage requires k_full")
+
+    @property
+    def vmem_fraction(self) -> float:
+        return self.vmem_bytes / hw.VMEM_PER_CORE
+
+    def describe(self) -> dict:
+        """Flat report row for benchmarks / the serving engine."""
+        d = {"op": self.op, "backend": self.backend,
+             "spec": str(self.spec) if self.spec else "",
+             "weight_store": self.weight_store,
+             "vmem_bytes": self.vmem_bytes,
+             "vmem_frac": round(self.vmem_fraction, 4)}
+        for f in ("block_m", "block_n", "block_k", "chunks", "block_h",
+                  "block_co", "k_full"):
+            v = getattr(self, f)
+            if v is not None:
+                d[f] = v
+        return d
+
+    def __str__(self):
+        tiles = ",".join(f"{f}={getattr(self, f)}"
+                         for f in ("block_m", "block_n", "block_k", "chunks",
+                                   "block_h", "block_co")
+                         if getattr(self, f) is not None)
+        spec = f" {self.spec}" if self.spec else ""
+        return (f"Plan[{self.op}/{self.backend}{spec} "
+                f"store={self.weight_store} {tiles}]")
+
+
+# ---------------------------------------------------------------------------
+# Backend registry
+# ---------------------------------------------------------------------------
+
+_BACKENDS: dict[tuple[str, str], object] = {}
+
+
+def register_backend(op: str, backend: str):
+    """Decorator: register ``fn(plan, *args)`` as the (op, backend) impl."""
+    def deco(fn):
+        _BACKENDS[(op, backend)] = fn
+        return fn
+    return deco
+
+
+def get_backend(op: str, backend: str):
+    try:
+        return _BACKENDS[(op, backend)]
+    except KeyError:
+        known = sorted(k for k in _BACKENDS if k[0] == op)
+        raise KeyError(
+            f"no backend {backend!r} registered for op {op!r}; "
+            f"registered: {known}") from None
+
+
+def registered_ops():
+    return sorted(_BACKENDS)
+
+
+def dispatch(plan: KernelPlan, *args, **kwargs):
+    """Route a call through the registry according to its plan."""
+    return get_backend(plan.op, plan.backend)(plan, *args, **kwargs)
+
+
+def resolve_backend(backend: str = "auto") -> str:
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    if backend not in ("pallas", "xla"):
+        raise ValueError(f"unknown backend {backend!r}")
+    return backend
+
+
+def default_interpret() -> bool:
+    """Pallas kernels run interpreted off-TPU (CPU validation mode)."""
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Planners (all lru_cached: one plan per layer signature per process)
+# ---------------------------------------------------------------------------
+
+def _lane_bytes(spec: PackSpec) -> int:
+    return jnp.dtype(spec.lane_dtype).itemsize
+
+
+@functools.lru_cache(maxsize=None)
+def plan_packed_matmul(m: int, kp: int, n: int, spec: PackSpec, *,
+                       backend: str = "auto", weight_store: str = "lanes",
+                       k_full: int | None = None,
+                       vmem_budget: int | None = None) -> KernelPlan:
+    """Plan a packed-lane matmul [m, kp] x [kp, n].
+
+    Tile choice mirrors ulppack_matmul's VMEM accounting: working set
+    ~= (bm*bk + bk*bn) lanes + (chunks+1)*bm*bn s32.  Defaults (128, 128,
+    chunks=8) are kept when they fit; otherwise chunks shrinks first (it only
+    amortizes grid overhead), then bn, then bm.
+    """
+    backend = resolve_backend(backend)
+    if weight_store == "dense" and k_full is None:
+        k_full = kp * spec.n_pack
+    budget = vmem_budget or int(hw.VMEM_PER_CORE * VMEM_FRACTION)
+    lb = _lane_bytes(spec)
+    kt = spec.k_tile
+
+    def working_set(bm, bn, chunks):
+        bk = chunks * kt
+        return (bm * bk + bk * bn) * lb + (chunks + 1) * bm * bn * 4
+
+    bm, bn, chunks = 128, 128, 8
+    while chunks > 1 and working_set(bm, bn, chunks) > budget:
+        chunks //= 2
+    while bn > 8 and working_set(bm, bn, chunks) > budget:
+        bn //= 2
+    while bm > 8 and working_set(bm, bn, chunks) > budget:
+        bm //= 2
+    return KernelPlan(
+        op="packed_matmul", backend=backend, spec=spec,
+        interpret=default_interpret(), weight_store=weight_store,
+        k_full=k_full, block_m=bm, block_n=bn, chunks=chunks,
+        vmem_bytes=working_set(bm, bn, chunks))
+
+
+@functools.lru_cache(maxsize=None)
+def plan_packed_conv2d(x_shape: tuple, w_shape: tuple, spec: PackSpec, *,
+                       padding: str = "SAME", backend: str = "auto",
+                       weight_store: str = "lanes", k_full: int | None = None,
+                       block_h: int | None = None, block_co: int | None = None,
+                       vmem_budget: int | None = None) -> KernelPlan:
+    """Plan a packed conv2d: x [N, H, W, Cp] * w [Fh, Fw, Cdim, Co].
+
+    Picks the largest ``block_h`` whose spatially-tiled working set —
+    halo-overlapped input tile, weight block, s32 accumulator + output tile —
+    fits the VMEM budget, so VMEM use is bounded by the tile rather than the
+    image and large resolutions stay feasible (DESIGN.md §10).
+    """
+    backend = resolve_backend(backend)
+    _, h, w, cp = x_shape
+    fh, fw, cdim, co = w_shape
+    if weight_store == "dense" and k_full is None:
+        k_full = cp * spec.n_pack
+    if padding == "SAME":
+        h, w = h + fh - 1, w + fw - 1
+    out_h, out_w = h - fh + 1, w - fw + 1
+    budget = vmem_budget or int(hw.VMEM_PER_CORE * VMEM_FRACTION)
+    lb = _lane_bytes(spec)
+    bco = block_co or min(8, co)
+    w_bytes = fh * fw * cdim * bco * (4 if weight_store == "dense" else lb)
+
+    def working_set(bh):
+        x_tile = (bh + fh - 1) * w * cp * lb
+        acc_out = 2 * bh * out_w * bco * 4
+        return x_tile + w_bytes + acc_out
+
+    if block_h is None:
+        if working_set(out_h) <= budget:
+            block_h = out_h            # whole image fits: single tile
+        else:
+            block_h = 1
+            for cand in _CONV_BLOCK_H_CANDIDATES:
+                if cand < out_h and working_set(cand) <= budget:
+                    block_h = cand
+                    break
+    block_h = min(block_h, out_h)
+    return KernelPlan(
+        op="packed_conv2d", backend=backend, spec=spec,
+        interpret=default_interpret(), weight_store=weight_store,
+        k_full=k_full, block_h=block_h, block_co=bco,
+        vmem_bytes=working_set(block_h))
+
+
+@functools.lru_cache(maxsize=None)
+def plan_quantize_pack(m: int, k: int, spec: PackSpec, *,
+                       backend: str = "auto",
+                       vmem_budget: int | None = None) -> KernelPlan:
+    """Plan the fused runtime quantize+pack over [m, k] activations."""
+    backend = resolve_backend(backend)
+    budget = vmem_budget or int(hw.VMEM_PER_CORE * VMEM_FRACTION)
+    bm = 256
+    # cap the K tile at the (n_pack-rounded) activation width: a 512 default
+    # on a narrow decode layer would quantize mostly padding
+    k_rounded = max(spec.n_pack, -(-k // spec.n_pack) * spec.n_pack)
+    bk = min(512, k_rounded)
+
+    def working_set(bm, bk):
+        # f32 in + s32 lattice + packed lanes + row-sum scratch
+        return bm * bk * (4 + 4) + bm * (bk // spec.n_pack) * \
+            _lane_bytes(spec) + bm * 4
+
+    while bm > 8 and working_set(bm, bk) > budget:
+        bm //= 2
+    return KernelPlan(op="quantize_pack", backend=backend, spec=spec,
+                      interpret=default_interpret(), block_m=bm, block_k=bk,
+                      vmem_bytes=working_set(bm, bk))
+
+
+@functools.lru_cache(maxsize=None)
+def plan_int_matmul(m: int, k: int, n: int, *, backend: str = "auto",
+                    vmem_budget: int | None = None) -> KernelPlan:
+    """Plan the unpacked integer matmul baseline."""
+    backend = resolve_backend(backend)
+    budget = vmem_budget or int(hw.VMEM_PER_CORE * VMEM_FRACTION)
+    bm, bn, bk = 128, 128, 512
+
+    def working_set(bm, bn, bk):
+        return (bm * bk + bk * bn) * 2 + 2 * bm * bn * 4
+
+    while bk > 64 and working_set(bm, bn, bk) > budget:
+        bk //= 2
+    return KernelPlan(op="int_matmul", backend=backend, spec=None,
+                      interpret=default_interpret(), block_m=bm, block_n=bn,
+                      block_k=bk, vmem_bytes=working_set(bm, bn, bk))
+
+
+def clear_plan_cache():
+    """Drop all memoized plans (tests / device changes)."""
+    plan_packed_matmul.cache_clear()
+    plan_packed_conv2d.cache_clear()
+    plan_quantize_pack.cache_clear()
+    plan_int_matmul.cache_clear()

@@ -5,6 +5,14 @@ A small channel-first... (TPU-native: NHWC) CNN whose conv layers run:
   * 'packed' — the deployed Sparq path: runtime quantize+P1-pack over
                channels, packed conv2d kernel, affine dequant.
 
+Deployment is two-phase, mirroring the paper's offline planning (§IV):
+``conv_prepare`` / ``prepare_packed_params`` quantize + pack each conv
+layer's weights ONCE (P1 lanes or bit-dense words) and ``layer_plans`` builds
+the per-layer ``KernelPlan``s; the forward pass then only quantizes
+activations and dispatches through the prepared plan — no per-call weight
+re-packing.  Un-prepared params still work (weights are packed inline), which
+keeps QAT-time packed evaluation simple.
+
 This model backs benchmarks/fig4_conv2d.py and fig5_precision_sweep.py and
 examples/train_cnn_qat.py.
 """
@@ -18,6 +26,7 @@ import numpy as np
 from repro.core import packing, quant
 from repro.core.packing import PackSpec
 from repro.kernels import ops
+from repro.kernels import plan as plan_lib
 from repro.models import common
 
 
@@ -31,26 +40,106 @@ def conv_init(key, fh, fw, cin, cout, qcfg, dtype=jnp.float32):
     return p
 
 
+def conv_prepare(p, qcfg, *, weight_store: str = "lanes"):
+    """Offline per-layer weight preparation (done once, not per forward).
+
+    Quantizes the float kernel to the w_bits lattice and stores it either as
+    P1 lanes ('lanes' -> ``w_packed``) or bit-dense int32 words ('dense' ->
+    ``w_words``, expanded in the conv kernel prologue).  The float kernel is
+    dropped from the prepared layer.
+    """
+    spec = PackSpec.from_config(qcfg)
+    w = p["kernel"].astype(jnp.float32)
+    w_scale = p.get("w_step", quant.calibrate_absmax(w, qcfg.w_bits)[0])
+    w_zp = qcfg.w_zero_point
+    q_w = quant.quantize_affine(w, w_scale, w_zp, qcfg.w_bits)
+    out = {"alpha": p.get("alpha", jnp.float32(4.0)),
+           "w_scale": jnp.asarray(w_scale, jnp.float32),
+           "w_zp": jnp.int32(w_zp)}
+    if weight_store == "dense":
+        out["w_words"] = ops.dense_store_conv_weights(q_w, qcfg.w_bits)
+    elif weight_store == "lanes":
+        out["w_packed"] = packing.pack_weights(q_w, spec, axis=2)
+    else:
+        raise ValueError(weight_store)
+    return out
+
+
+def prepare_packed_params(params, cfg, *, weight_store: str = "lanes"):
+    """Convert a trained/QAT param tree for packed serving (weights packed
+    once); the float stem and head are untouched (they run un-quantized)."""
+    return {"stem": params["stem"],
+            "layers": [conv_prepare(p, cfg.quant, weight_store=weight_store)
+                       for p in params["layers"]],
+            "head": params["head"]}
+
+
+def layer_plans(params, cfg, x_shape, *, padding: str = "SAME",
+                backend: str = "auto"):
+    """Per-conv-layer KernelPlans for an input [N, H, W, 3] shape.
+
+    SAME padding keeps H, W constant through the stack, so each layer's plan
+    differs only in channel counts.  Returns a list aligned with
+    params['layers'].
+    """
+    n, h, w, _ = x_shape
+    spec = PackSpec.from_config(cfg.quant)
+    chans = cfg.cnn_channels
+    plans = []
+    for i, p in enumerate(params["layers"]):
+        cin = chans[i - 1] if i > 0 else chans[0]
+        if "w_packed" in p:
+            w_shape = tuple(p["w_packed"].shape)
+            store, k_full = "lanes", None
+            cp = w_shape[2]
+        elif "w_words" in p:
+            w_shape = tuple(p["w_words"].shape)
+            store = "dense"
+            k_full = cin
+            cp = -(-k_full // spec.n_pack)
+        else:
+            w_shape = tuple(p["kernel"].shape)
+            cp = -(-w_shape[2] // spec.n_pack)
+            w_shape = w_shape[:2] + (cp,) + w_shape[3:]
+            store, k_full = "lanes", None
+        plans.append(plan_lib.plan_packed_conv2d(
+            (n, h, w, cp), w_shape, spec, padding=padding, backend=backend,
+            weight_store=store, k_full=k_full))
+    return plans
+
+
 def conv_apply(p, x, qcfg, *, quant_mode="none", padding="SAME",
-               backend="auto"):
+               backend="auto", plan=None):
     if quant_mode == "packed" and qcfg.enabled:
-        spec = PackSpec(qcfg.w_bits, qcfg.a_bits, jnp.dtype(qcfg.lane_dtype),
-                        qcfg.n_pack)
-        w = p["kernel"].astype(jnp.float32)
-        w_scale = p.get("w_step", quant.calibrate_absmax(w, qcfg.w_bits)[0])
-        w_zp = qcfg.w_zero_point
-        q_w = quant.quantize_affine(w, w_scale, w_zp, qcfg.w_bits)
-        wp = packing.pack_weights(q_w, spec, axis=2)
+        spec = PackSpec.from_config(qcfg)
+        prepared = "w_packed" in p or "w_words" in p
+        if prepared:
+            w_scale, w_zp = p["w_scale"], p["w_zp"]
+            wp = p.get("w_packed", p.get("w_words"))
+            weight_store = "dense" if "w_words" in p else "lanes"
+            fh, fw = wp.shape[:2]
+        else:
+            # un-prepared fallback (QAT-time eval): pack inline
+            w = p["kernel"].astype(jnp.float32)
+            w_scale = p.get("w_step", quant.calibrate_absmax(w,
+                                                             qcfg.w_bits)[0])
+            w_zp = qcfg.w_zero_point
+            q_w = quant.quantize_affine(w, w_scale, w_zp, qcfg.w_bits)
+            wp = packing.pack_weights(q_w, spec, axis=2)
+            weight_store = "lanes"
+            fh, fw = p["kernel"].shape[:2]
         # activations: PACT range [0, alpha] -> z=0 lattice
         alpha = p.get("alpha", jnp.float32(4.0))
         a_scale = alpha / qcfg.qmax_a
         xq = quant.quantize_affine(jnp.clip(x, 0.0, alpha), a_scale, 0,
                                    qcfg.a_bits)
         xp = packing.pack_activations(xq, spec, axis=-1)
+        k_full = x.shape[-1] if weight_store == "dense" else None
         acc = ops.packed_conv2d(xp, wp, spec, padding=padding,
-                                backend=backend).astype(jnp.float32)
+                                backend=backend, weight_store=weight_store,
+                                k_full=k_full, plan=plan).astype(jnp.float32)
         # zero-point correction (z_a = 0): acc - z_w * patch_sums(a)
-        ones = jnp.ones(p["kernel"].shape[:3] + (1,), jnp.int32)
+        ones = jnp.ones((fh, fw, x.shape[-1], 1), jnp.int32)
         psum = jax.lax.conv_general_dilated(
             xq, ones, (1, 1), padding,
             dimension_numbers=("NHWC", "HWIO", "NHWC"),
@@ -82,13 +171,19 @@ def init_params(key, cfg):
     return {"stem": stem, "layers": layers, "head": head}
 
 
-def forward(params, cfg, x, *, quant_mode="none", backend="auto"):
-    """x: [N, H, W, 3] image -> logits [N, classes]."""
+def forward(params, cfg, x, *, quant_mode="none", backend="auto",
+            plans=None):
+    """x: [N, H, W, 3] image -> logits [N, classes].
+
+    ``plans`` (from ``layer_plans``) routes each conv through its prebuilt
+    KernelPlan; without it, plans are looked up from the memoized planners.
+    """
     h = jax.nn.relu(conv_apply(params["stem"], x, cfg.quant,
                                quant_mode="none"))
-    for p in params["layers"]:
+    for i, p in enumerate(params["layers"]):
+        plan = plans[i] if plans is not None else None
         h = jax.nn.relu(conv_apply(p, h, cfg.quant, quant_mode=quant_mode,
-                                   backend=backend))
+                                   backend=backend, plan=plan))
     pooled = jnp.mean(h, axis=(1, 2))
     return common.dense_apply(params["head"], pooled,
                               compute_dtype=jnp.float32)

@@ -49,13 +49,14 @@ def dense_apply(p, x, *, qcfg: QuantConfig | None = None,
     """y = x @ kernel (+ bias), under the selected quantization mode."""
     quantized = qcfg is not None and qcfg.enabled and "w_step" in p \
         or (qcfg is not None and qcfg.enabled and "w_packed" in p)
-    if quant_mode == "packed" and "w_packed" in p:
-        spec = PackSpec(qcfg.w_bits, qcfg.a_bits,
-                        jnp.dtype(qcfg.lane_dtype), qcfg.n_pack)
+    if quant_mode == "packed" and ("w_packed" in p or "w_dense" in p):
+        spec = PackSpec.from_config(qcfg)
+        dense = "w_dense" in p
         return ops.quantized_linear(
-            x.astype(jnp.float32), p["w_packed"], p["col_sums"],
-            p["a_scale"], p["a_zp"], p["w_scale"], p["w_zp"], spec,
-            bias=p.get("bias"), backend="auto",
+            x.astype(jnp.float32), p["w_dense"] if dense else p["w_packed"],
+            p["col_sums"], p["a_scale"], p["a_zp"], p["w_scale"], p["w_zp"],
+            spec, bias=p.get("bias"), backend="auto",
+            weight_store="dense" if dense else "lanes",
             out_dtype=compute_dtype)
     kernel = p["kernel"].astype(compute_dtype)
     if quant_mode == "qat" and quantized and "w_step" in p:
@@ -74,21 +75,32 @@ def dense_apply(p, x, *, qcfg: QuantConfig | None = None,
     return y
 
 
-def pack_dense_params(p, qcfg: QuantConfig):
-    """Offline conversion QAT/float Dense params -> deployed packed params."""
-    spec = PackSpec(qcfg.w_bits, qcfg.a_bits, jnp.dtype(qcfg.lane_dtype),
-                    qcfg.n_pack)
+def pack_dense_params(p, qcfg: QuantConfig, *, dense_store: bool = False):
+    """Offline conversion QAT/float Dense params -> deployed packed params.
+
+    ``dense_store=True`` keeps the weight bit-dense (int32 words, true
+    w_bits/value HBM footprint; key ``w_dense``) instead of as P1 lanes —
+    the decode memory-bound path; lanes are recovered at use.
+    """
+    spec = PackSpec.from_config(qcfg)
     kernel = p["kernel"].astype(jnp.float32)
     w_scale = p.get("w_step")
     if w_scale is None:
         w_scale, _ = quant.calibrate_absmax(kernel, qcfg.w_bits)
     w_zp = jnp.int32(qcfg.w_zero_point)
-    w_packed, col_sums = ops.prepare_weights(kernel, w_scale, w_zp, spec)
+    store = "dense" if dense_store else "lanes"
+    w_packed, col_sums = ops.prepare_weights(kernel, w_scale, w_zp, spec,
+                                             weight_store=store)
     a_scale = p.get("a_step", jnp.float32(1.0 / np.sqrt(qcfg.qmax_a)))
     a_zp = jnp.int32((qcfg.qmax_a + 1) // 2)
-    out = {"w_packed": w_packed, "col_sums": col_sums,
+    out = {"w_dense" if dense_store else "w_packed": w_packed,
+           "col_sums": col_sums,
            "w_scale": jnp.asarray(w_scale, jnp.float32), "w_zp": w_zp,
            "a_scale": jnp.asarray(a_scale, jnp.float32), "a_zp": a_zp}
+    if dense_store:
+        # word packing rounds K up; record the exact K so offline plan
+        # building keys the same plan the dispatch path builds from x.shape
+        out["k_full"] = int(kernel.shape[0])
     if "bias" in p:
         out["bias"] = p["bias"]
     return out

@@ -21,7 +21,7 @@ import numpy as np
 
 from repro.launch import steps as steps_lib
 from repro.models import lm
-from repro.serve.prepare import prepare_serving_params
+from repro.serve.prepare import build_layer_plans, prepare_serving_params
 
 
 @dataclasses.dataclass
@@ -35,13 +35,20 @@ class Request:
 
 class ServingEngine:
     def __init__(self, cfg, params, *, max_batch: int = 4,
-                 max_len: int = 512, packed: bool = True, greedy=True):
+                 max_len: int = 512, packed: bool = True, greedy=True,
+                 dense_store: bool = False):
         self.cfg = cfg
         self.max_batch = max_batch
         self.max_len = max_len
         self.greedy = greedy
-        self.params = prepare_serving_params(params, cfg) if packed \
-            else params
+        self.params = prepare_serving_params(params, cfg,
+                                             dense_store=dense_store) \
+            if packed else params
+        # Kernel plans are fixed at engine init (paper §IV: one execution
+        # plan per layer, chosen offline) — decode-time dispatch hits these
+        # memoized objects instead of re-deciding per call.
+        self.plans = build_layer_plans(self.params, cfg,
+                                       batch_rows=max_batch) if packed else {}
         self._decode = jax.jit(steps_lib.make_decode_step(cfg))
         self._queue: deque[Request] = deque()
         self.caches = lm.init_caches(cfg, max_batch, max_len,
@@ -112,6 +119,11 @@ class ServingEngine:
                 req.done = True
                 self.slot_req[s] = None
         return True
+
+    def plan_report(self):
+        """Flat per-layer plan rows (path + KernelPlan.describe())."""
+        return [{"layer": path, **plan.describe()}
+                for path, plan in sorted(self.plans.items())]
 
     def run_to_completion(self):
         done = []

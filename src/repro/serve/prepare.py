@@ -3,14 +3,23 @@
 Every quantizable 2-D Dense ({kernel, w_step, a_step}) becomes its packed
 integer representation ({w_packed, col_sums, scales, zero-points}) via
 core.common.pack_dense_params.  MoE expert tensors (3-D) and embeddings keep
-fake-quant serving (DESIGN.md §5).  Optionally weights are ALSO bit-dense
-stored (ops.dense_store_weights) for the decode memory-bound path.
+fake-quant serving (DESIGN.md §5).  With ``dense_store=True`` weights are
+instead bit-dense stored (ops.dense_store_weights, key ``w_dense``) for the
+decode memory-bound path.
+
+``build_layer_plans`` builds the per-layer KernelPlans for the packed tree
+once, offline (paper §IV: the execution plan is fixed before serving) — the
+serving engine calls it at init and keeps the result for reporting; the
+memoized planners guarantee the same plan objects are the ones the jitted
+decode step dispatches through.
 """
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core.packing import PackSpec
+from repro.kernels import plan as plan_lib
 from repro.models import common
 
 
@@ -19,14 +28,19 @@ def _is_packable(node) -> bool:
             and hasattr(node["kernel"], "ndim") and node["kernel"].ndim == 2)
 
 
-def prepare_serving_params(params, cfg):
+def _is_packed(node) -> bool:
+    return isinstance(node, dict) and ("w_packed" in node or "w_dense" in node)
+
+
+def prepare_serving_params(params, cfg, *, dense_store: bool = False):
     """Recursively pack all quantizable Dense leaves."""
     if not cfg.quant.enabled:
         return params
 
     def walk(node):
         if _is_packable(node):
-            return common.pack_dense_params(node, cfg.quant)
+            return common.pack_dense_params(node, cfg.quant,
+                                            dense_store=dense_store)
         if isinstance(node, dict):
             return {k: walk(v) for k, v in node.items()}
         if isinstance(node, list):
@@ -36,6 +50,45 @@ def prepare_serving_params(params, cfg):
         return node
 
     return walk(params)
+
+
+def build_layer_plans(params, cfg, *, batch_rows: int = 1,
+                      backend: str = "auto"):
+    """One KernelPlan per packed Dense leaf, keyed by its tree path.
+
+    ``batch_rows`` is the decode-time row count (engine batch); plans are
+    memoized, so the jitted serving step hits exactly these objects when it
+    dispatches.  Returns {'path/to/leaf': KernelPlan}.
+    """
+    if not cfg.quant.enabled:
+        return {}
+    spec = PackSpec.from_config(cfg.quant)
+    plans = {}
+
+    def walk(node, path):
+        if _is_packed(node):
+            dense = "w_dense" in node
+            w = node["w_dense"] if dense else node["w_packed"]
+            n = w.shape[-1]
+            if dense:
+                per = 32 // spec.w_bits
+                k_full = int(node.get("k_full", w.shape[0] * per))
+                kp = -(-k_full // spec.n_pack)
+            else:
+                k_full, kp = None, w.shape[0]
+            plans[path] = plan_lib.plan_packed_matmul(
+                batch_rows, kp, n, spec, backend=backend,
+                weight_store="dense" if dense else "lanes", k_full=k_full)
+            return
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(v, f"{path}/{k}" if path else k)
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                walk(v, f"{path}[{i}]")
+
+    walk(params, "")
+    return plans
 
 
 def serving_param_bytes(params) -> int:

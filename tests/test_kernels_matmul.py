@@ -7,6 +7,7 @@ Integer paths must match EXACTLY.
 import jax.numpy as jnp
 import numpy as np
 import pytest
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.packing import PackSpec

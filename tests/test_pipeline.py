@@ -6,6 +6,8 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
 SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
@@ -34,6 +36,7 @@ SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_gpipe_two_stages_subprocess():
     r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
                        text=True, timeout=300,
