@@ -1,7 +1,9 @@
-"""Shared benchmark helpers: timing, cost analysis, CSV emission."""
+"""Shared benchmark helpers: timing, cost analysis, CSV + JSON emission."""
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -37,3 +39,29 @@ def emit(rows, header):
     for r in rows:
         print(",".join(str(r.get(h, "")) for h in header))
     return rows
+
+
+def jsonable(obj):
+    """Recursively convert numpy scalars/arrays so json.dump accepts the
+    row dicts benchmarks return."""
+    if isinstance(obj, dict):
+        return {str(k): jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [jsonable(v) for v in obj]
+    if isinstance(obj, np.integer):
+        return int(obj)
+    if isinstance(obj, np.floating):
+        return float(obj)
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    return obj
+
+
+def write_bench_json(name: str, payload, out_dir: str = ".") -> str:
+    """Persist one benchmark's rows as BENCH_<name>.json (the artifact the
+    bench-smoke CI lane uploads so perf trajectory is recorded per PR)."""
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(jsonable(payload), f, indent=2, sort_keys=True)
+    return path

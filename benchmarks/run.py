@@ -1,9 +1,11 @@
 """Benchmark harness — one module per paper table/figure (DESIGN.md §7).
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--out DIR]
 
 Emits ``name,us_per_call,derived`` style CSV blocks per benchmark plus the
-aggregated roofline table from the dry-run reports.
+aggregated roofline table from the dry-run reports, and persists each
+benchmark's rows as ``BENCH_<key>.json`` under ``--out`` (the artifacts the
+bench-smoke CI lane uploads so perf trajectory is recorded per PR).
 """
 
 from __future__ import annotations
@@ -19,12 +21,15 @@ def main() -> None:
                     help="smaller shapes (CI-speed)")
     ap.add_argument("--only", default="",
                     help="comma-list: fig4,fig5,table2,roofline,serve")
+    ap.add_argument("--out", default=".",
+                    help="directory for BENCH_<key>.json result files")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (fig4_conv2d, fig5_precision_sweep,
                             roofline_table, serve_microbench,
                             table2_kernel_report)
+    from benchmarks.common import write_bench_json
 
     benches = [
         ("fig4_conv2d  [paper Fig.4: conv2d impl comparison]",
@@ -33,7 +38,8 @@ def main() -> None:
          "fig5", fig5_precision_sweep.run),
         ("table2_kernel_report  [paper Table II analogue: kernel report]",
          "table2", table2_kernel_report.run),
-        ("serve_microbench  [packed vs bf16/int serving linears]",
+        ("serve_microbench  [packed serving linears + engine-level "
+         "chunked-prefill vs token-at-a-time]",
          "serve", serve_microbench.run),
         ("roofline_table  [assignment: 40-cell dry-run aggregate]",
          "roofline", roofline_table.run),
@@ -45,8 +51,15 @@ def main() -> None:
         print(f"\n=== {title} ===")
         t0 = time.time()
         try:
-            fn(quick=args.quick)
-            print(f"# done in {time.time()-t0:.1f}s")
+            rows = fn(quick=args.quick)
+            dt = time.time() - t0
+            if rows:
+                path = write_bench_json(
+                    key, {"bench": key, "quick": args.quick,
+                          "seconds": round(dt, 2), "rows": rows},
+                    args.out)
+                print(f"# wrote {path}")
+            print(f"# done in {dt:.1f}s")
         except Exception as e:  # keep the harness running
             failures += 1
             print(f"# FAILED: {type(e).__name__}: {e}")

@@ -1,12 +1,19 @@
-"""Serving-linear microbench: bf16 vs unpacked-int vs packed ULPPACK paths
-at decode shapes, on CPU XLA (wall-clock) + compiled FLOP/byte counts.
+"""Serving microbench, two levels (DESIGN.md §12):
 
-This is the LM-integration counterpart of fig4 (which benches the paper's
-conv2d): the same packed arithmetic applied to a transformer projection.
+* ``run_linear`` — bf16 vs unpacked-int vs packed ULPPACK paths at decode
+  shapes, on CPU XLA (wall-clock) + compiled FLOP/byte counts.  The
+  LM-integration counterpart of fig4 (which benches the paper's conv2d).
+* ``run_engine`` — engine-level before/after: chunked-prefill continuous
+  batching (``ServingEngine`` with prefill_chunk > 1) against the
+  token-at-a-time admission baseline (prefill_chunk=1) at prompt length
+  64, reporting the scheduler Metrics (prefill/decode tokens/s, slot
+  occupancy).  This is the end-to-end number the paper's thesis is about:
+  kernels only pay off when the serving layer keeps them fed.
 """
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -15,7 +22,7 @@ from repro.core.packing import PackSpec
 from repro.kernels import ops
 
 
-def run(quick: bool = False):
+def run_linear(quick: bool = False):
     m = 8                       # decode rows per device
     k, n = (1024, 1024) if quick else (4096, 4096)
     rng = np.random.default_rng(0)
@@ -61,6 +68,72 @@ def run(quick: bool = False):
 
     emit(rows, ["path", "wall_us", "flops", "bytes", "weight_bytes"])
     return rows
+
+
+PROMPT_LEN = 64
+
+
+def run_engine(quick: bool = False):
+    """Engine-level prefill/decode throughput: chunked prefill vs the
+    token-at-a-time baseline (chunk=1) at prompt length 64."""
+    from repro import configs
+    from repro.core.quant import QuantConfig
+    from repro.models import lm
+    from repro.serve.engine import Request, ServingEngine
+
+    cfg = configs.get_config("stablelm-1.6b", reduced=True).replace(
+        param_dtype="float32", compute_dtype="float32",
+        quant=QuantConfig(enabled=False))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    n_req = 2 if quick else 4
+    max_batch = 2
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, PROMPT_LEN).astype(np.int32)
+               for _ in range(n_req)]
+
+    def bench(chunk):
+        from repro.serve.engine import Metrics
+        eng = ServingEngine(cfg, params, max_batch=max_batch,
+                            max_len=PROMPT_LEN + 16, packed=False,
+                            prefill_chunk=chunk)
+        # warmup: compile both jitted steps outside the measured window
+        eng.submit(Request(uid=10_000, prompt=prompts[0],
+                           max_new_tokens=4))
+        eng.run_to_completion()
+        eng.metrics = Metrics()
+        for i, p in enumerate(prompts):
+            eng.submit(Request(uid=i, prompt=p, max_new_tokens=4))
+        eng.run_to_completion()
+        return eng.metrics.report()
+
+    chunks = (1, 16) if quick else (1, 8, 16, 32)
+    rows = []
+    base = None
+    for chunk in chunks:
+        rep = bench(chunk)
+        if chunk == 1:
+            base = rep["prefill_tok_s"]
+        rows.append({
+            "engine": "token-at-a-time" if chunk == 1
+            else f"chunked-prefill-{chunk}",
+            "prefill_chunk": chunk,
+            "prompt_len": PROMPT_LEN,
+            "prefill_tok_s": rep["prefill_tok_s"],
+            "decode_tok_s": rep["decode_tok_s"],
+            "occupancy": rep["occupancy"],
+            "steps": rep["steps"],
+            "speedup_vs_baseline": round(rep["prefill_tok_s"] / base, 2)
+            if base else 0.0,
+        })
+    emit(rows, ["engine", "prefill_chunk", "prompt_len", "prefill_tok_s",
+                "decode_tok_s", "occupancy", "steps",
+                "speedup_vs_baseline"])
+    return rows
+
+
+def run(quick: bool = False):
+    return {"linear": run_linear(quick),
+            "engine": run_engine(quick)}
 
 
 if __name__ == "__main__":

@@ -1,6 +1,6 @@
 """sparq-cnn — the paper's own conv2d benchmark network (Fig. 4/5)."""
 
-from repro.configs.base import ModelConfig, ParallelConfig
+from repro.configs.base import ModelConfig
 from repro.core.quant import QuantConfig
 
 

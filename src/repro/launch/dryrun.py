@@ -28,7 +28,6 @@ import traceback
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 
 REPORT_DIR = Path(__file__).resolve().parents[3] / "reports" / "dryrun"
 

@@ -1,20 +1,22 @@
-"""CLI server: pack a model for deployment and serve synthetic requests.
+"""CLI server: pack a model for deployment and serve synthetic requests
+through the continuous-batching engine (chunked prefill + ragged decode,
+DESIGN.md §12).
 
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
-        --reduced --requests 4
+        --reduced --requests 4 --prefill-chunk 16
 """
 
 from __future__ import annotations
 
 import argparse
-import time
+import json
 
 import jax
 import numpy as np
 
 from repro import configs
 from repro.models import lm
-from repro.serve.engine import Request, ServingEngine
+from repro.serve.engine import Request, SamplingParams, ServingEngine
 
 
 def main():
@@ -22,28 +24,39 @@ def main():
     ap.add_argument("--arch", required=True, choices=configs.ALL_NAMES)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=6)
     ap.add_argument("--max-new-tokens", type=int, default=8)
     ap.add_argument("--max-batch", type=int, default=2)
     ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="backpressure cap on queued requests (0 = none)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy")
+    ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--no-packed", action="store_true")
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch, reduced=args.reduced)
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
-    eng = ServingEngine(cfg, params, max_batch=args.max_batch,
-                        max_len=args.max_len, packed=not args.no_packed)
+    eng = ServingEngine(
+        cfg, params, max_batch=args.max_batch, max_len=args.max_len,
+        packed=not args.no_packed, prefill_chunk=args.prefill_chunk,
+        max_queue=args.max_queue or None,
+        sampling=SamplingParams(temperature=args.temperature,
+                                top_k=args.top_k))
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         eng.submit(Request(
-            uid=i, prompt=rng.integers(0, cfg.vocab_size, 6).astype(
+            uid=i,
+            prompt=rng.integers(0, cfg.vocab_size, args.prompt_len).astype(
                 np.int32),
             max_new_tokens=args.max_new_tokens))
-    t0 = time.time()
     done = eng.run_to_completion()
-    dt = time.time() - t0
+    rep = eng.metrics.report()
     toks = sum(len(r.output) for r in done)
-    print(f"{len(done)} requests, {toks} tokens, {dt:.1f}s "
-          f"({toks/dt:.1f} tok/s)")
+    print(f"{len(done)} requests, {toks} generated tokens")
+    print(json.dumps(rep, indent=2))
 
 
 if __name__ == "__main__":

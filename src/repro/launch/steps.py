@@ -1,12 +1,17 @@
 """Step factories: train_step / prefill_step / decode_step.
 
 These are the functions the dry-run lowers and the trainer/server jit.
-Quantization modes per step kind (DESIGN.md §2, §5):
-  train   -> 'qat'    (LSQ fake-quant, STE grads)
-  prefill -> 'qat'    (compute-bound; on TPU the fused Pallas kernel serves
-                       this role — the CPU-lowered dry-run uses fake-quant)
-  decode  -> 'packed' (the deployed Sparq integer path; scan-free batched
-                       packed dots so roofline FLOPs are exact)
+Quantization modes per step kind (DESIGN.md §2, §5, §12):
+  train         -> 'qat'    (LSQ fake-quant, STE grads)
+  prefill       -> 'qat'    (compute-bound; on TPU the fused Pallas kernel
+                             serves this role — the CPU-lowered dry-run
+                             uses fake-quant)
+  prefill_chunk -> 'packed' (serving-time chunked prefill over the engine's
+                             packed params: [B, chunk] windows per slot at
+                             batched arithmetic intensity)
+  decode        -> 'packed' (the deployed Sparq integer path; scan-free
+                             batched packed dots so roofline FLOPs are
+                             exact)
 """
 
 from __future__ import annotations
@@ -21,7 +26,8 @@ from repro.optim import adamw, schedules
 def quant_mode_for(cfg, kind: str) -> str:
     if not cfg.quant.enabled:
         return "none"
-    return {"train": "qat", "prefill": "qat", "decode": "packed"}[kind]
+    return {"train": "qat", "prefill": "qat", "prefill_chunk": "packed",
+            "decode": "packed"}[kind]
 
 
 # ---------------------------------------------------------------------------
@@ -135,14 +141,55 @@ def make_prefill_step(cfg, max_len: int):
 
 
 def make_decode_step(cfg):
+    """Single-token decode step.
+
+    ``index`` scalar = lockstep (all rows share one position, the legacy
+    path); ``index`` [B] = per-slot positions for ragged continuous
+    batching, with optional ``valid`` [B] (1 = live slot, 0 = dead slot:
+    no cache write, output ignored).  See DESIGN.md §12.
+    """
     qmode = quant_mode_for(cfg, "decode")
 
-    def decode_step(params, caches, batch, index):
+    def decode_step(params, caches, batch, index, valid=None):
         b = batch["tokens"].shape[0]
         dec = dict(batch)
-        dec["positions"] = jnp.full((b, 1), index, jnp.int32)
+        idx = jnp.asarray(index, jnp.int32)
+        if idx.ndim == 0:
+            dec["positions"] = jnp.full((b, 1), idx, jnp.int32)
+        else:
+            dec["positions"] = idx[:, None]
         logits, _, caches = lm.forward(params, cfg, dec, quant_mode=qmode,
-                                       caches=caches, cache_index=index)
+                                       caches=caches, cache_index=idx,
+                                       cache_valid=valid)
         return logits[:, -1], caches
 
     return decode_step
+
+
+def make_prefill_chunk_step(cfg):
+    """Chunked-prefill step: consumes a [B, chunk] token window per slot.
+
+    ``index`` [B] is each slot's write offset (tokens already in its cache
+    row); ``valid`` [B] is how many of the window's tokens are real (valid-
+    prefix; 1 lets a decode-phase slot ride along with its single pending
+    token, 0 = dead slot).  Runs the deployed packed path so admission cost
+    is O(prompt_len / chunk) launches at batched arithmetic intensity
+    instead of O(prompt_len) batch-1 decode steps (DESIGN.md §12).
+    Returns (last-valid-token logits [B, vocab], new caches).
+    """
+    qmode = quant_mode_for(cfg, "prefill_chunk")
+
+    def prefill_chunk_step(params, caches, batch, index, valid):
+        b, c = batch["tokens"].shape
+        dec = dict(batch)
+        idx = jnp.asarray(index, jnp.int32)
+        vld = jnp.asarray(valid, jnp.int32)
+        dec["positions"] = idx[:, None] + jnp.arange(c, dtype=jnp.int32)
+        logits, _, caches = lm.forward(params, cfg, dec, quant_mode=qmode,
+                                       caches=caches, cache_index=idx,
+                                       cache_valid=vld)
+        last = jnp.clip(vld - 1, 0, c - 1)
+        return (jnp.take_along_axis(logits, last[:, None, None],
+                                    axis=1)[:, 0], caches)
+
+    return prefill_chunk_step

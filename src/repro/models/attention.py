@@ -137,15 +137,21 @@ def precompute_cross_kv(p, cfg, enc_out, *, quant_mode="none"):
 
 
 def attention_apply(p, cfg, x, *, positions, quant_mode="none",
-                    cache=None, cache_index=None, kv_x=None,
-                    kv_positions=None, causal=True, positions3=None,
-                    q_chunk=512, cross_kv=None):
+                    cache=None, cache_index=None, cache_valid=None,
+                    kv_x=None, kv_positions=None, causal=True,
+                    positions3=None, q_chunk=512, cross_kv=None):
     """Full attention forward.
 
     Modes:
       * training/prefill: cache=None (or cache provided to be FILLED when
         cache_index is None -> returns (out, new_cache)).
-      * decode: cache + cache_index given, x is [B, 1, d].
+      * decode: cache + cache_index given, x is [B, 1, d].  A scalar
+        cache_index is the lockstep path (all rows share one position); a
+        [B] vector gives each row its own write offset (ragged batches,
+        DESIGN.md §12), with x [B, S, d] for chunked prefill.
+      * ragged windows: cache_valid [B] counts the valid-prefix tokens of
+        each row's window; trailing pad tokens are never written to the
+        cache (0 = dead slot, fully masked).
       * cross-attention: kv_x (encoder states) given; non-causal, no RoPE
         ring-buffer concerns.
     """
@@ -179,18 +185,43 @@ def attention_apply(p, cfg, x, *, positions, quant_mode="none",
     new_cache = None
 
     if cache is not None and cache_index is not None:
-        # ---- decode: write new k/v into the ring buffer ----
+        # ---- decode / chunked prefill: write new k/v into the ring ----
         size = cache["k"].shape[1]
-        slot = cache_index % size if window else cache_index
-        new_cache = _cache_write(cache, k, v, slot)
+        idx = jnp.asarray(cache_index)
+        if idx.ndim == 0:
+            # lockstep scalar path: every row writes the same slot
+            slot = idx % size if window else idx
+            new_cache = _cache_write(cache, k, v, slot)
+            kv_pos = _ring_positions(idx, size, window)        # [size]
+        else:
+            # per-slot positions: row b writes its window at absolute
+            # positions idx[b]..idx[b]+sq-1; tokens past cache_valid[b]
+            # are dropped so ragged rows never corrupt the ring
+            if window and sq > 1:
+                raise NotImplementedError(
+                    "chunked ragged prefill over a sliding-window ring "
+                    "would overwrite slots still visible to earlier "
+                    "queries of the same window; feed ring-cache archs "
+                    "token-by-token (ServingEngine clamps prefill_chunk "
+                    "to 1 for them)")
+            vlen = (jnp.full((b,), sq, jnp.int32) if cache_valid is None
+                    else jnp.asarray(cache_valid, jnp.int32))
+            offs = jnp.arange(sq, dtype=jnp.int32)
+            wpos = idx[:, None] + offs[None, :]                # [B, sq]
+            slots = wpos % size if window else wpos
+            new_cache = _cache_write_ragged(
+                cache, k, v, slots, offs[None, :] < vlen[:, None])
+            kv_pos = _ring_positions_batch(idx + vlen - 1, size,
+                                           window)            # [B, size]
         k, v = _cache_read(new_cache, k.dtype)
-        kv_pos = _ring_positions(cache_index, size, window)
 
         def mask_fn(qpos):
-            m = (kv_pos[None, None, :] <= qpos[:, :, None])
-            m &= kv_pos[None, None, :] >= 0
+            kp = kv_pos[:, None, :] if kv_pos.ndim == 2 \
+                else kv_pos[None, None, :]
+            m = kp <= qpos[:, :, None]
+            m &= kp >= 0
             if window:
-                m &= (qpos[:, :, None] - kv_pos[None, None, :]) < window
+                m &= (qpos[:, :, None] - kp) < window
             return m
     else:
         # ---- training / prefill ----
@@ -247,6 +278,46 @@ def _cache_write(cache, k, v, slot):
                 "v_scale": dus(cache["v_scale"], sv, slot, 1)}
     return {"k": dus(cache["k"], k.astype(cache["k"].dtype), slot, 1),
             "v": dus(cache["v"], v.astype(cache["v"].dtype), slot, 1)}
+
+
+def _cache_write_ragged(cache, k, v, slots, valid):
+    """Per-row ragged write: token j of row b lands at ring slot
+    ``slots[b, j]``; tokens with ``valid[b, j]`` False are redirected out
+    of bounds and dropped (scatter ``mode='drop'``), so pad tokens never
+    overwrite live entries.  O(window tokens) per call — the decode hot
+    path writes one slot per row, like the lockstep ``_cache_write``.
+
+    Callers guarantee a row never writes the same slot twice in one call
+    (the windowed sq > 1 case is rejected upstream), so scatter duplicate
+    semantics are never exercised.
+    """
+    size = cache["k"].shape[1]
+    bi = jnp.arange(k.shape[0], dtype=jnp.int32)[:, None]
+    tgt = jnp.where(valid, slots, size)
+
+    def put(buf, val):
+        return buf.at[bi, tgt].set(val.astype(buf.dtype), mode="drop")
+
+    if "k_scale" in cache:
+        qk, sk = _kv_quantize(k)
+        qv, sv = _kv_quantize(v)
+        return {"k": put(cache["k"], qk), "v": put(cache["v"], qv),
+                "k_scale": put(cache["k_scale"], sk),
+                "v_scale": put(cache["v_scale"], sv)}
+    return {"k": put(cache["k"], k), "v": put(cache["v"], v)}
+
+
+def _ring_positions_batch(last, size, window):
+    """Batched `_ring_positions`: absolute positions stored per ring slot
+    for each row given its last written position ``last [B]`` (-1 = row
+    empty).  Plain broadcast arithmetic (no vmap)."""
+    slots = jnp.arange(size, dtype=jnp.int32)[None, :]
+    last = last[:, None]
+    if not window:
+        return jnp.where(slots <= last, slots, -1)
+    cur_slot = last % size
+    pos = last - ((cur_slot - slots) % size)
+    return jnp.where(pos >= 0, pos, -1)
 
 
 def _cache_read(cache, dtype):

@@ -53,9 +53,14 @@ def block_init(key, cfg, i, *, cross=False, dtype=jnp.float32):
 
 
 def block_apply(p, cfg, x, *, kind="attn", positions, quant_mode="none",
-                cache=None, cache_index=None, causal=True, positions3=None,
-                enc_kv=None, moe_path="einsum"):
-    """One residual block.  Returns (x, new_cache, aux_loss)."""
+                cache=None, cache_index=None, cache_valid=None, causal=True,
+                positions3=None, enc_kv=None, moe_path="einsum"):
+    """One residual block.  Returns (x, new_cache, aux_loss).
+
+    ``cache_index`` may be a scalar (lockstep decode) or a [B] vector of
+    per-slot write offsets; ``cache_valid`` [B] counts each row's valid-
+    prefix tokens for ragged windows (DESIGN.md §12).
+    """
     aux = 0.0
     new_cache = dict(cache) if cache is not None else None
     h = common.rmsnorm_apply(p["norm1"], x, cfg.norm_eps)
@@ -63,29 +68,29 @@ def block_apply(p, cfg, x, *, kind="attn", positions, quant_mode="none",
         sub = cache.get("attn") if cache else None
         out, sub2 = attention.attention_apply(
             p["attn"], cfg, h, positions=positions, quant_mode=quant_mode,
-            cache=sub, cache_index=cache_index, causal=causal,
-            positions3=positions3)
+            cache=sub, cache_index=cache_index, cache_valid=cache_valid,
+            causal=causal, positions3=positions3)
         if new_cache is not None and sub2 is not None:
             new_cache["attn"] = sub2
     elif kind == "mamba":
         sub = cache.get("mamba") if cache else None
         out, sub2 = mamba.mamba_apply(
             p["mamba"], cfg, h, quant_mode=quant_mode, cache=sub,
-            cache_index=cache_index)
+            cache_index=cache_index, cache_valid=cache_valid)
         if new_cache is not None and sub2 is not None:
             new_cache["mamba"] = sub2
     elif kind == "mlstm":
         sub = cache.get("mlstm") if cache else None
         out, sub2 = xlstm.mlstm_apply(
             p["mlstm"], cfg, h, quant_mode=quant_mode, cache=sub,
-            cache_index=cache_index)
+            cache_index=cache_index, cache_valid=cache_valid)
         if new_cache is not None and sub2 is not None:
             new_cache["mlstm"] = sub2
     elif kind == "slstm":
         sub = cache.get("slstm") if cache else None
         out, sub2 = xlstm.slstm_apply(
             p["slstm"], cfg, h, quant_mode=quant_mode, cache=sub,
-            cache_index=cache_index)
+            cache_index=cache_index, cache_valid=cache_valid)
         if new_cache is not None and sub2 is not None:
             new_cache["slstm"] = sub2
     else:
@@ -173,9 +178,14 @@ def _decoder_inputs(params, cfg, batch):
 
 
 def forward(params, cfg, batch, *, quant_mode="none", caches=None,
-            cache_index=None, enc_out=None, remat=False,
+            cache_index=None, cache_valid=None, enc_out=None, remat=False,
             moe_path="einsum"):
-    """Full forward.  Returns (logits, aux_loss, new_caches)."""
+    """Full forward.  Returns (logits, aux_loss, new_caches).
+
+    ``cache_index`` scalar = lockstep decode; [B] vector = per-slot cache
+    write offsets (ragged continuous batching).  ``cache_valid`` [B] is the
+    per-row valid-prefix length of the current window (chunked prefill).
+    """
     import os
     seq_ax = "model" if os.environ.get("REPRO_SEQ_ACT", "0") == "1" \
         else None
@@ -196,8 +206,8 @@ def forward(params, cfg, batch, *, quant_mode="none", caches=None,
         return block_apply(
             blk, cfg, x, kind=kind, positions=positions,
             quant_mode=quant_mode, cache=sub, cache_index=cache_index,
-            causal=True, positions3=positions3, enc_kv=enc_kv,
-            moe_path=moe_path)
+            cache_valid=cache_valid, causal=True, positions3=positions3,
+            enc_kv=enc_kv, moe_path=moe_path)
 
     for li, blk in enumerate(params["layers"]):
         if cfg.is_encoder_decoder:

@@ -67,25 +67,48 @@ def _ssm_params(p, cfg, xc, quant_mode):
 
 
 def mamba_apply(p, cfg, x, *, quant_mode="none", cache=None,
-                cache_index=None):
-    """x: [B, S, d].  Returns (y, new_cache)."""
+                cache_index=None, cache_valid=None):
+    """x: [B, S, d].  Returns (y, new_cache).
+
+    With cache + cache_index the recurrence continues from the cached
+    (conv, ssm) state for any window length S (single-token decode or a
+    chunked-prefill window).  ``cache_valid`` [B] gates ragged windows:
+    only each row's valid-prefix tokens advance its state (DESIGN.md §12).
+    """
     b, s, _ = x.shape
     cd = common.dtype_of(cfg.compute_dtype)
     qm = dict(qcfg=cfg.quant, quant_mode=quant_mode, compute_dtype=cd)
     di = cfg.ssm_expand * cfg.d_model
     cw = cfg.ssm_conv_width
+    decoding = cache is not None and cache_index is not None
+    vlen = None
+    if decoding:
+        vlen = (jnp.full((b,), s, jnp.int32) if cache_valid is None
+                else jnp.asarray(cache_valid, jnp.int32))
 
     xz = dense_apply(p["in_proj"], x, **qm)
     xi, z = jnp.split(xz, 2, axis=-1)                 # [B, S, di] each
     xi32 = xi.astype(jnp.float32)
 
     # depthwise causal conv1d
-    if cache is not None and cache_index is not None:
-        hist = jnp.concatenate([cache["conv"], xi32], axis=1)  # [B,cw,di]
-        conv_out = jnp.einsum("bkd,kd->bd", hist,
+    if decoding:
+        # window continuation: conv history comes from the cache
+        hist = jnp.concatenate([cache["conv"].astype(jnp.float32), xi32],
+                               axis=1)                # [B, cw-1+S, di]
+        windows = jnp.stack([hist[:, i:i + s] for i in range(cw)],
+                            axis=2)                   # [B, S, cw, di]
+        conv_out = jnp.einsum("bskd,kd->bsd", windows,
                               p["conv_w"].astype(jnp.float32))
-        conv_out = (conv_out + p["conv_b"].astype(jnp.float32))[:, None]
-        new_conv = hist[:, 1:]
+        conv_out = conv_out + p["conv_b"].astype(jnp.float32)
+        # history after each row consumed its vlen[b] valid tokens (ragged
+        # windows are valid-prefix): per-row shifted window of hist, taken
+        # with a one-hot contraction (plain einsum, no per-row gather)
+        t_hist = hist.shape[1]
+        want = vlen[:, None, None] + jnp.arange(cw - 1)[None, :, None]
+        onehot = (want == jnp.arange(t_hist)[None, None, :]) \
+            .astype(jnp.float32)                   # [B, cw-1, T]
+        new_conv = jnp.einsum("bwt,btd->bwd", onehot,
+                              hist).astype(cache["conv"].dtype)
     else:
         padded = jnp.pad(xi32, ((0, 0), (cw - 1, 0), (0, 0)))
         windows = jnp.stack(
@@ -102,10 +125,21 @@ def mamba_apply(p, cfg, x, *, quant_mode="none", cache=None,
     da = jnp.exp(dt[..., None] * a)                   # [B,S,di,ds]
     dbx = (dt * xc)[..., None] * b_mat[:, :, None, :]  # [B,S,di,ds]
 
-    if cache is not None and cache_index is not None:
-        h = cache["ssm"] * da[:, 0] + dbx[:, 0]
-        y = jnp.einsum("bds,bs->bd", h, c_mat[:, 0])[:, None]
-        new_ssm = h
+    if decoding:
+        def dstep(h, inp):
+            da_t, dbx_t, c_t, keep = inp
+            h2 = h * da_t + dbx_t
+            y_t = jnp.einsum("bds,bs->bd", h2, c_t)
+            # invalid (pad) tokens emit garbage y but leave the state alone
+            return jnp.where(keep[:, None, None], h2, h), y_t
+
+        keep = (jnp.arange(s)[None, :] < vlen[:, None]).T  # [S, B]
+        last, ys = jax.lax.scan(
+            dstep, cache["ssm"].astype(jnp.float32),
+            (jnp.moveaxis(da, 1, 0), jnp.moveaxis(dbx, 1, 0),
+             jnp.moveaxis(c_mat, 1, 0), keep))
+        y = jnp.moveaxis(ys, 0, 1)                    # [B, S, di]
+        new_ssm = last.astype(cache["ssm"].dtype)
     else:
         def step(h, inp):
             da_t, dbx_t, c_t = inp

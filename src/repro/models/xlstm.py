@@ -111,8 +111,14 @@ def _mlstm_chunk(q, k, v, i_raw, g_log, state):
 
 
 def mlstm_apply(p, cfg, x, *, quant_mode="none", cache=None,
-                cache_index=None, chunk=128):
-    """x: [B, S, d] -> (y, new_cache)."""
+                cache_index=None, cache_valid=None, chunk=128):
+    """x: [B, S, d] -> (y, new_cache).
+
+    The cached path continues the chunkwise recurrence from (C, n, m) for
+    any window length S.  ``cache_valid`` [B] gates ragged windows: pad
+    tokens past each row's valid prefix are turned into identity updates
+    (forget gate 1, input gate 0 — the same trick the prefill pad uses).
+    """
     b, s, d = x.shape
     cd = common.dtype_of(cfg.compute_dtype)
     qm = dict(qcfg=cfg.quant, quant_mode=quant_mode, compute_dtype=cd)
@@ -136,6 +142,15 @@ def mlstm_apply(p, cfg, x, *, quant_mode="none", cache=None,
     g_log = jax.nn.log_sigmoid(gates[..., nh:]).transpose(0, 2, 1)
 
     if cache is not None and cache_index is not None:
+        if cache_valid is not None:
+            inval = (jnp.arange(s)[None, None, :]
+                     >= jnp.asarray(cache_valid, jnp.int32)[:, None, None])
+            i_raw = jnp.where(inval, -1e30, i_raw)
+            g_log = jnp.where(inval, 0.0, g_log)
+            # belt-and-braces: zero pad k/v so even the all-invalid fresh-
+            # state corner (m_prev = -inf -> w_kv = 1) adds nothing to C/n
+            k = jnp.where(inval[..., None], 0.0, k)
+            v = jnp.where(inval[..., None], 0.0, v)
         state = (cache["C"].astype(jnp.float32),
                  cache["n"].astype(jnp.float32),
                  cache["m"].astype(jnp.float32))
@@ -237,8 +252,13 @@ def _slstm_step(p_r, state, wx, nh, hd):
 
 
 def slstm_apply(p, cfg, x, *, quant_mode="none", cache=None,
-                cache_index=None, chunk=256):
-    """x: [B, S, d] -> (y, new_cache).  Sequential scan (chunk-checkpointed)."""
+                cache_index=None, cache_valid=None, chunk=256):
+    """x: [B, S, d] -> (y, new_cache).  Sequential scan (chunk-checkpointed).
+
+    The cached path scans any window length S from the cached state;
+    ``cache_valid`` [B] gates ragged windows (pad tokens past each row's
+    valid prefix leave that row's state untouched).
+    """
     b, s, d = x.shape
     cd = common.dtype_of(cfg.compute_dtype)
     qm = dict(qcfg=cfg.quant, quant_mode=quant_mode, compute_dtype=cd)
@@ -252,8 +272,20 @@ def slstm_apply(p, cfg, x, *, quant_mode="none", cache=None,
                  cache["n"].astype(jnp.float32),
                  cache["h"].astype(jnp.float32),
                  cache["m"].astype(jnp.float32))
-        state = _slstm_step(r, state, wx[:, 0], nh, hd)
-        h_seq = state[2][:, None]
+        vlen = (jnp.full((b,), s, jnp.int32) if cache_valid is None
+                else jnp.asarray(cache_valid, jnp.int32))
+
+        def dstep(st, inp):
+            wxt, keep = inp
+            st2 = _slstm_step(r, st, wxt, nh, hd)
+            st2 = tuple(jnp.where(keep[:, None, None], a2, a1)
+                        for a1, a2 in zip(st, st2))
+            return st2, st2[2]
+
+        keep = (jnp.arange(s)[None, :] < vlen[:, None]).T   # [S, B]
+        state, hs = jax.lax.scan(dstep, state,
+                                 (jnp.moveaxis(wx, 1, 0), keep))
+        h_seq = jnp.moveaxis(hs, 0, 1)                      # [B, S, nh, hd]
         new_cache = {k2: v2.astype(cache[k2].dtype) for k2, v2 in
                      zip(("c", "n", "h", "m"), state)}
     else:

@@ -13,8 +13,6 @@ from __future__ import annotations
 
 import re
 
-import numpy as np
-
 from repro.roofline import hw
 
 _DTYPE_BYTES = {

@@ -1,18 +1,27 @@
-"""Batched serving engine: continuous-batching scheduler over prefill/decode.
+"""Continuous-batching serving engine: chunked prefill + ragged decode.
 
-Production shape: requests arrive with prompts; the engine packs up to
-``max_batch`` concurrent sequences, prefills each prompt into its batch slot,
-then decodes all live slots in lockstep, retiring finished sequences and
-admitting queued ones into freed slots (continuous batching).  All steps are
-jitted once per (batch, cache) shape.
+Scheduler shape (DESIGN.md §12 "Serving scheduler"): requests wait in a
+bounded queue (backpressure), an admission pass moves them into free batch
+slots, prompts stream through the jitted chunked-prefill step — [B, chunk]
+token windows per slot, so admission costs O(prompt_len / chunk) launches
+at batched arithmetic intensity instead of O(prompt_len) batch-1 decode
+steps — and live slots decode lockstep-free: every slot carries its own
+position, cache writes land at per-slot offsets (``cache_valid`` /
+vector ``cache_index`` in models/lm.forward), and sampling (greedy /
+temperature / top-k) is per slot.  Decode-phase slots ride along inside
+prefill passes with their single pending token, finished sequences retire
+immediately, and freed slots are re-admitted the same step.
 
-The decode path runs the paper's packed integer kernels via
-prepare.prepare_serving_params (quant_mode='packed').
+Both steps run the paper's packed integer kernels via
+prepare.prepare_serving_params (quant_mode='packed'); KernelPlans for the
+decode and prefill row counts are fixed at engine init (paper §IV: one
+execution plan per layer, chosen offline).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 
 import jax
@@ -24,101 +33,311 @@ from repro.models import lm
 from repro.serve.prepare import build_layer_plans, prepare_serving_params
 
 
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decoding control; temperature <= 0 means greedy."""
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
 @dataclasses.dataclass
 class Request:
     uid: int
     prompt: np.ndarray          # [S] int32
     max_new_tokens: int = 16
+    sampling: SamplingParams | None = None   # engine default when None
     output: list = dataclasses.field(default_factory=list)
     done: bool = False
+    submit_time: float = 0.0
+    admit_time: float = 0.0
+    finish_time: float = 0.0
+
+
+@dataclasses.dataclass
+class Metrics:
+    """Engine-level counters (DESIGN.md §12): throughput split by phase,
+    admission latency, slot occupancy, backpressure rejections.
+
+    ``prefill_tokens`` counts prompt tokens consumed by chunked prefill;
+    ``generated_tokens`` counts every sampled token; ``decode_tokens``
+    only those sampled in pure decode passes, so decode_tok_s divides
+    tokens by the wall time of the same passes.  Tokens sampled inside a
+    mixed prefill pass (decode riders, first token after a prompt
+    completes) count as generated but land in the prefill time bucket.
+    """
+    prefill_tokens: int = 0
+    generated_tokens: int = 0
+    decode_tokens: int = 0
+    prefill_time_s: float = 0.0
+    decode_time_s: float = 0.0
+    admitted: int = 0
+    retired: int = 0
+    rejected: int = 0
+    steps: int = 0
+    slot_steps_live: int = 0
+    slot_steps_total: int = 0
+    admission_wait_s: float = 0.0
+
+    def report(self) -> dict:
+        def div(a, b):
+            return a / b if b else 0.0
+        return {
+            "prefill_tokens": self.prefill_tokens,
+            "generated_tokens": self.generated_tokens,
+            "decode_tokens": self.decode_tokens,
+            "prefill_tok_s": round(div(self.prefill_tokens,
+                                       self.prefill_time_s), 1),
+            "decode_tok_s": round(div(self.decode_tokens,
+                                      self.decode_time_s), 1),
+            "admitted": self.admitted,
+            "retired": self.retired,
+            "rejected": self.rejected,
+            "steps": self.steps,
+            "occupancy": round(div(self.slot_steps_live,
+                                   self.slot_steps_total), 3),
+            "mean_admission_wait_s": round(div(self.admission_wait_s,
+                                               self.admitted), 5),
+        }
 
 
 class ServingEngine:
+    """Admission scheduler over chunked prefill + ragged decode (module
+    docstring; scheduler design in DESIGN.md §12)."""
+
     def __init__(self, cfg, params, *, max_batch: int = 4,
                  max_len: int = 512, packed: bool = True, greedy=True,
-                 dense_store: bool = False):
+                 dense_store: bool = False, prefill_chunk: int = 16,
+                 max_queue: int | None = None,
+                 sampling: SamplingParams | None = None):
         self.cfg = cfg
         self.max_batch = max_batch
         self.max_len = max_len
-        self.greedy = greedy
+        self.prefill_chunk = max(1, int(prefill_chunk))
+        if cfg.sliding_window:
+            # ring caches admit only token-by-token prefill: a >1-token
+            # window would overwrite ring slots still visible to earlier
+            # queries of the same window (attention rejects that case)
+            self.prefill_chunk = 1
+        self.max_queue = max_queue
+        self.sampling = sampling if sampling is not None else \
+            SamplingParams(temperature=0.0 if greedy else 1.0)
         self.params = prepare_serving_params(params, cfg,
                                              dense_store=dense_store) \
             if packed else params
         # Kernel plans are fixed at engine init (paper §IV: one execution
-        # plan per layer, chosen offline) — decode-time dispatch hits these
-        # memoized objects instead of re-deciding per call.
-        self.plans = build_layer_plans(self.params, cfg,
-                                       batch_rows=max_batch) if packed else {}
+        # plan per layer, chosen offline) for both jitted row counts —
+        # decode (max_batch rows) and chunked prefill (max_batch * chunk).
+        self.plans = build_layer_plans(
+            self.params, cfg, batch_rows=max_batch,
+            prefill_rows=max_batch * self.prefill_chunk) if packed else {}
         self._decode = jax.jit(steps_lib.make_decode_step(cfg))
+        self._prefill = jax.jit(steps_lib.make_prefill_chunk_step(cfg))
         self._queue: deque[Request] = deque()
         self.caches = lm.init_caches(cfg, max_batch, max_len,
                                      dtype=jnp.bfloat16)
+        # batch-1 fresh-cache template: admission resets a slot's rows from
+        # it (recurrent states have non-zero init, e.g. mLSTM m = -inf)
+        self._fresh = lm.init_caches(cfg, 1, max_len, dtype=jnp.bfloat16)
         # per-slot bookkeeping
         self.slot_req: list = [None] * max_batch
-        self.slot_pos = np.zeros(max_batch, np.int32)
+        self.slot_pos = np.zeros(max_batch, np.int32)   # tokens in cache
+        self.slot_fed = np.zeros(max_batch, np.int32)   # prompt consumed
+        self._slot_rng: list = [None] * max_batch
+        self._finished: list = []
+        self.metrics = Metrics()
 
-    def submit(self, req: Request):
+    # ------------------------------------------------------------------
+    # Submission / admission
+    # ------------------------------------------------------------------
+
+    def submit(self, req: Request) -> bool:
+        """Queue a request.  Returns False (rejected, counted in metrics)
+        when the backpressure cap ``max_queue`` is hit."""
+        if len(req.prompt) + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request {req.uid}: prompt ({len(req.prompt)}) + "
+                f"max_new_tokens ({req.max_new_tokens}) exceeds engine "
+                f"max_len ({self.max_len})")
+        if self.max_queue is not None and len(self._queue) >= self.max_queue:
+            self.metrics.rejected += 1
+            return False
+        req.submit_time = time.perf_counter()
         self._queue.append(req)
+        return True
+
+    def _reset_slot(self, slot: int):
+        """Restore one batch row of the recurrent-state cache leaves to
+        their freshly-initialized values (mamba conv/ssm, xLSTM C/n/m —
+        non-zero inits included).  Attention rows need no reset: their
+        validity is re-derived per call from cache_index/cache_valid, so
+        stale entries are masked until overwritten."""
+
+        def reset(cur, fresh):
+            return cur.at[slot:slot + 1].set(fresh.astype(cur.dtype))
+
+        out = []
+        for cur_layer, fresh_layer in zip(self.caches, self._fresh):
+            layer = dict(cur_layer)
+            for kind, sub in cur_layer.items():
+                if kind == "attn" or sub is None:
+                    continue
+                layer[kind] = jax.tree.map(reset, sub, fresh_layer[kind])
+            out.append(layer)
+        self.caches = out
 
     def _admit(self):
-        """Fill free slots; per-slot prefill via sequential decode of the
-        prompt (slot-addressed caches keep this simple and allocation-free)."""
+        now = time.perf_counter()
         for slot in range(self.max_batch):
             if self.slot_req[slot] is None and self._queue:
                 req = self._queue.popleft()
+                self._reset_slot(slot)
                 self.slot_req[slot] = req
                 self.slot_pos[slot] = 0
-                # feed prompt tokens one at a time into this slot
-                for tok in req.prompt:
-                    self._step_slot(slot, int(tok))
+                self.slot_fed[slot] = 0
+                sp = req.sampling or self.sampling
+                self._slot_rng[slot] = np.random.default_rng(
+                    (sp.seed, req.uid & 0xFFFFFFFF))
+                req.admit_time = now
+                self.metrics.admitted += 1
+                self.metrics.admission_wait_s += now - req.submit_time
 
-    def _step_slot(self, slot, token):
-        """Advance one slot by one token (used for prompt feeding)."""
-        tokens = np.zeros((self.max_batch, 1), np.int32)
-        tokens[slot, 0] = token
-        batch = {"tokens": jnp.asarray(tokens)}
-        if self.cfg.mrope:
-            p = np.tile(self.slot_pos[:, None], (1, 1))
-            batch["positions3"] = jnp.asarray(
-                np.broadcast_to(p[None], (3, self.max_batch, 1)))
-        logits, self.caches = self._decode(
-            self.params, self.caches, batch,
-            jnp.int32(int(self.slot_pos[slot])))
-        self.slot_pos[slot] += 1
-        return np.asarray(logits[slot])
+    # ------------------------------------------------------------------
+    # Stepping
+    # ------------------------------------------------------------------
 
-    def step(self):
-        """One lockstep decode over all live slots."""
+    def step(self) -> bool:
+        """One scheduler tick: admit, then one batched model pass —
+        chunked prefill while any slot is mid-prompt (decode-phase slots
+        ride along), else a single-token ragged decode."""
         self._admit()
         live = [s for s in range(self.max_batch)
                 if self.slot_req[s] is not None]
         if not live:
             return False
-        tokens = np.zeros((self.max_batch, 1), np.int32)
+        self.metrics.steps += 1
+        self.metrics.slot_steps_live += len(live)
+        self.metrics.slot_steps_total += self.max_batch
+        prefilling = any(
+            self.slot_fed[s] < len(self.slot_req[s].prompt) for s in live)
+        t0 = time.perf_counter()
+        if prefilling:
+            n_prompt = self._prefill_pass(live)
+            self.metrics.prefill_time_s += time.perf_counter() - t0
+            self.metrics.prefill_tokens += n_prompt
+        else:
+            self._decode_pass(live)
+            self.metrics.decode_time_s += time.perf_counter() - t0
+        return True
+
+    def _positions3(self, index: np.ndarray, width: int):
+        pos = index[:, None] + np.arange(width, dtype=np.int32)[None, :]
+        return jnp.asarray(
+            np.broadcast_to(pos[None], (3, self.max_batch, width)).copy())
+
+    def _prefill_pass(self, live) -> int:
+        c = self.prefill_chunk
+        tokens = np.zeros((self.max_batch, c), np.int32)
+        index = np.zeros(self.max_batch, np.int32)
+        valid = np.zeros(self.max_batch, np.int32)
+        take = {}
+        n_prompt = 0
         for s in live:
             req = self.slot_req[s]
-            last = req.output[-1] if req.output else int(req.prompt[-1])
-            tokens[s, 0] = last
+            index[s] = self.slot_pos[s]
+            rem = len(req.prompt) - int(self.slot_fed[s])
+            if rem > 0:        # mid-prompt: its next chunk window
+                t = min(c, rem)
+                fed = int(self.slot_fed[s])
+                tokens[s, :t] = req.prompt[fed:fed + t]
+                valid[s] = take[s] = t
+                n_prompt += t
+            else:              # decode-phase rider: one pending token
+                tokens[s, 0] = req.output[-1]
+                valid[s] = 1
         batch = {"tokens": jnp.asarray(tokens)}
         if self.cfg.mrope:
-            p = self.slot_pos[:, None]
-            batch["positions3"] = jnp.asarray(
-                np.broadcast_to(p[None], (3, self.max_batch, 1)).copy())
-        # lockstep: all slots share a position index per jit signature; use
-        # per-slot positions via the max (ring caches tolerate gaps)
-        idx = int(max(self.slot_pos[s] for s in live))
-        logits, self.caches = self._decode(self.params, self.caches, batch,
-                                           jnp.int32(idx))
+            batch["positions3"] = self._positions3(index, c)
+        logits, self.caches = self._prefill(
+            self.params, self.caches, batch, jnp.asarray(index),
+            jnp.asarray(valid))
         logits = np.asarray(logits)
         for s in live:
             req = self.slot_req[s]
-            nxt = int(np.argmax(logits[s]))
-            req.output.append(nxt)
+            if s in take:
+                self.slot_fed[s] += take[s]
+                self.slot_pos[s] += take[s]
+                if self.slot_fed[s] == len(req.prompt):
+                    self._emit_token(s, logits[s],
+                                     decode_pass=False)  # first gen token
+            else:
+                self.slot_pos[s] += 1
+                self._emit_token(s, logits[s], decode_pass=False)
+        return n_prompt
+
+    def _decode_pass(self, live):
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        index = np.zeros(self.max_batch, np.int32)
+        valid = np.zeros(self.max_batch, np.int32)
+        for s in live:
+            req = self.slot_req[s]
+            tokens[s, 0] = req.output[-1] if req.output \
+                else int(req.prompt[-1])
+            index[s] = self.slot_pos[s]
+            valid[s] = 1
+        batch = {"tokens": jnp.asarray(tokens)}
+        if self.cfg.mrope:
+            batch["positions3"] = self._positions3(index, 1)
+        logits, self.caches = self._decode(
+            self.params, self.caches, batch, jnp.asarray(index),
+            jnp.asarray(valid))
+        logits = np.asarray(logits)
+        for s in live:
             self.slot_pos[s] += 1
-            if len(req.output) >= req.max_new_tokens:
-                req.done = True
-                self.slot_req[s] = None
-        return True
+            self._emit_token(s, logits[s], decode_pass=True)
+
+    def _emit_token(self, s: int, logits_row: np.ndarray, *,
+                    decode_pass: bool):
+        req = self.slot_req[s]
+        tok = self._sample(logits_row, req.sampling or self.sampling,
+                           self._slot_rng[s])
+        req.output.append(int(tok))
+        self.metrics.generated_tokens += 1
+        if decode_pass:
+            self.metrics.decode_tokens += 1
+        if len(req.output) >= req.max_new_tokens:
+            req.done = True
+            req.finish_time = time.perf_counter()
+            self._finished.append(req)
+            self.metrics.retired += 1
+            self.slot_req[s] = None
+
+    @staticmethod
+    def _sample(logits_row, sp: SamplingParams, rng) -> int:
+        logits_row = np.asarray(logits_row, np.float64)
+        if sp.greedy:
+            return int(np.argmax(logits_row))
+        scaled = logits_row / max(sp.temperature, 1e-6)
+        if sp.top_k > 0:
+            kk = min(sp.top_k, scaled.size)
+            kth = np.partition(scaled, -kk)[-kk]
+            scaled = np.where(scaled < kth, -np.inf, scaled)
+        scaled = scaled - scaled.max()
+        probs = np.exp(scaled)
+        probs /= probs.sum()
+        return int(rng.choice(len(probs), p=probs))
+
+    # ------------------------------------------------------------------
+    # Reporting / draining
+    # ------------------------------------------------------------------
+
+    @property
+    def num_pending(self) -> int:
+        return len(self._queue)
 
     def plan_report(self):
         """Flat per-layer plan rows (path + KernelPlan.describe())."""
@@ -126,9 +345,11 @@ class ServingEngine:
                 for path, plan in sorted(self.plans.items())]
 
     def run_to_completion(self):
-        done = []
-        while self._queue or any(r is not None for r in self.slot_req):
-            before = [r for r in self.slot_req if r is not None]
-            self.step()
-            done.extend(r for r in before if r.done)
+        """Drain queue + slots; returns every request retired since the
+        last call.  Retirement is recorded at sample time (not via
+        before/after slot snapshots), so a request admitted and finished
+        within a single step() is still collected."""
+        while self.step():
+            pass
+        done, self._finished = self._finished, []
         return done

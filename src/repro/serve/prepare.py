@@ -9,9 +9,10 @@ decode memory-bound path.
 
 ``build_layer_plans`` builds the per-layer KernelPlans for the packed tree
 once, offline (paper §IV: the execution plan is fixed before serving) — the
-serving engine calls it at init and keeps the result for reporting; the
+serving engine calls it at init for both serving row counts (decode batch
+and chunked-prefill batch x chunk) and keeps the result for reporting; the
 memoized planners guarantee the same plan objects are the ones the jitted
-decode step dispatches through.
+decode and prefill-chunk steps dispatch through.
 """
 
 from __future__ import annotations
@@ -53,12 +54,15 @@ def prepare_serving_params(params, cfg, *, dense_store: bool = False):
 
 
 def build_layer_plans(params, cfg, *, batch_rows: int = 1,
+                      prefill_rows: int | None = None,
                       backend: str = "auto"):
     """One KernelPlan per packed Dense leaf, keyed by its tree path.
 
-    ``batch_rows`` is the decode-time row count (engine batch); plans are
-    memoized, so the jitted serving step hits exactly these objects when it
-    dispatches.  Returns {'path/to/leaf': KernelPlan}.
+    ``batch_rows`` is the decode-time row count (engine batch);
+    ``prefill_rows`` (engine batch x prefill chunk) additionally plans the
+    chunked-prefill shapes under a ``...@prefill`` key.  Plans are
+    memoized, so both jitted serving steps hit exactly these objects when
+    they dispatch.  Returns {'path/to/leaf': KernelPlan}.
     """
     if not cfg.quant.enabled:
         return {}
@@ -79,6 +83,11 @@ def build_layer_plans(params, cfg, *, batch_rows: int = 1,
             plans[path] = plan_lib.plan_packed_matmul(
                 batch_rows, kp, n, spec, backend=backend,
                 weight_store="dense" if dense else "lanes", k_full=k_full)
+            if prefill_rows and prefill_rows != batch_rows:
+                plans[f"{path}@prefill"] = plan_lib.plan_packed_matmul(
+                    prefill_rows, kp, n, spec, backend=backend,
+                    weight_store="dense" if dense else "lanes",
+                    k_full=k_full)
             return
         if isinstance(node, dict):
             for k, v in node.items():

@@ -1,8 +1,6 @@
 """Checkpoint save/restore: round-trip equality, crash consistency, elastic
 resharding, garbage collection."""
 
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,7 +1,6 @@
 """Dry-run machinery: lower a production cell in a 512-device subprocess,
 parse collective bytes from compiled HLO, applicability matrix."""
 
-import json
 import subprocess
 import sys
 

@@ -2,9 +2,7 @@
 straggler detection — simulated on CPU with a tiny model."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro import configs
 from repro.core.quant import QuantConfig

@@ -6,8 +6,6 @@ device-level validation.
 """
 
 import numpy as np
-import pytest
-import jax
 from jax.sharding import PartitionSpec as P
 
 from repro import configs
