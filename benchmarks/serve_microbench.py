@@ -1,4 +1,4 @@
-"""Serving microbench, two levels (DESIGN.md §12):
+"""Serving microbench, three levels (DESIGN.md §12, §13):
 
 * ``run_linear`` — bf16 vs unpacked-int vs packed ULPPACK paths at decode
   shapes, on CPU XLA (wall-clock) + compiled FLOP/byte counts.  The
@@ -9,6 +9,11 @@
   64, reporting the scheduler Metrics (prefill/decode tokens/s, slot
   occupancy).  This is the end-to-end number the paper's thesis is about:
   kernels only pay off when the serving layer keeps them fed.
+* ``run_kv_cache`` — cache-bytes-per-slot + decode tok/s at kv_bits in
+  {16, 8, 4, 2} under one fixed HBM cache budget: the sub-byte packed KV
+  cache converts bit density into admission capacity (slots scale with the
+  bytes shrink), the serving-side analogue of the paper's sub-byte storage
+  thesis.
 """
 
 from __future__ import annotations
@@ -131,9 +136,72 @@ def run_engine(quick: bool = False):
     return rows
 
 
+def run_kv_cache(quick: bool = False):
+    """Cache bytes/slot + decode tok/s vs kv_bits under one HBM budget.
+
+    The budget is fixed at ``base_slots`` bf16 slots; quantized caches admit
+    budget // bytes-per-slot concurrent sequences, so the slots column shows
+    the admission-capacity win (~2x int8, ~4x 4-bit, ~8x 2-bit) alongside
+    the decode throughput of each storage layout.  head_dim=64 matches the
+    full model (the reduced config's derived 16 would understate density:
+    per-(pos, head) scales amortize over the head dim).
+    """
+    from repro import configs
+    from repro.core.quant import QuantConfig
+    from repro.models import lm
+    from repro.serve.engine import Metrics, Request, ServingEngine
+    from repro.serve.prepare import cache_bytes_per_slot
+
+    base = configs.get_config("stablelm-1.6b", reduced=True).replace(
+        param_dtype="float32", compute_dtype="float32", head_dim=64,
+        quant=QuantConfig(enabled=False))
+    params = lm.init_params(jax.random.PRNGKey(0), base)
+    max_len = 48
+    base_slots = 2 if quick else 4
+    budget = base_slots * cache_bytes_per_slot(base, max_len)
+    prompt_len, new_tokens = 8, 4 if quick else 8
+    rng = np.random.default_rng(0)
+
+    rows = []
+    ref = None
+    for kv_bits in (16, 8, 4, 2):
+        cfg = base.replace(quant=QuantConfig(
+            enabled=False, kv_bits=0 if kv_bits == 16 else kv_bits))
+        eng = ServingEngine(cfg, params, max_len=max_len, packed=False,
+                            prefill_chunk=8, hbm_cache_budget=budget)
+        n_req = eng.max_batch
+        prompts = [rng.integers(0, cfg.vocab_size, prompt_len).astype(
+            np.int32) for _ in range(n_req)]
+        # warmup compiles both jitted steps outside the measured window
+        eng.submit(Request(uid=10_000, prompt=prompts[0], max_new_tokens=2))
+        eng.run_to_completion()
+        eng.metrics = Metrics()
+        for i, p in enumerate(prompts):
+            eng.submit(Request(uid=i, prompt=p,
+                               max_new_tokens=new_tokens))
+        eng.run_to_completion()
+        rep = eng.metrics.report()
+        cap = eng.capacity_report()
+        if kv_bits == 16:
+            ref = cap
+        rows.append({
+            "kv_bits": kv_bits,
+            "cache_bytes_per_slot": cap["cache_bytes_per_slot"],
+            "slots": cap["slots"],
+            "decode_tok_s": rep["decode_tok_s"],
+            "shrink_vs_bf16": round(ref["cache_bytes_per_slot"]
+                                    / cap["cache_bytes_per_slot"], 2),
+            "slots_vs_bf16": round(cap["slots"] / ref["slots"], 2),
+        })
+    emit(rows, ["kv_bits", "cache_bytes_per_slot", "slots", "decode_tok_s",
+                "shrink_vs_bf16", "slots_vs_bf16"])
+    return rows
+
+
 def run(quick: bool = False):
     return {"linear": run_linear(quick),
-            "engine": run_engine(quick)}
+            "engine": run_engine(quick),
+            "kv_cache": run_kv_cache(quick)}
 
 
 if __name__ == "__main__":

@@ -1,6 +1,8 @@
 """Serve a quantized LM with batched requests through the continuous-batching
 engine: params are packed offline into ULPPACK lanes (the paper's deployed
-path) and the decode steps run the packed integer kernels.
+path), the decode steps run the packed integer kernels, and the KV cache is
+stored sub-byte (kv_bits=4: bit-dense packed words + per-(pos, head) scales),
+so a fixed HBM cache budget admits ~4x the concurrent sequences of bf16.
 
 Run:  PYTHONPATH=src python examples/serve_quantized.py
 """
@@ -21,7 +23,7 @@ def main():
     cfg = configs.get_config("stablelm-1.6b", reduced=True).replace(
         d_model=128, num_heads=8, num_kv_heads=8, d_ff=384, num_layers=4,
         vocab_size=2048, param_dtype="float32", compute_dtype="float32",
-        quant=QuantConfig(enabled=True, w_bits=2, a_bits=2))
+        quant=QuantConfig(enabled=True, w_bits=2, a_bits=2, kv_bits=4))
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
 
     raw_bytes = serving_param_bytes(params)
@@ -32,6 +34,12 @@ def main():
           f"({raw_bytes/packed_bytes:.1f}x smaller)")
 
     eng = ServingEngine(cfg, params, max_batch=2, max_len=64, packed=True)
+    cap = eng.capacity_report()
+    bf16_slot = lm.cache_bytes(
+        cfg.replace(quant=cfg.quant.replace(kv_bits=0)), 1, 64)
+    print(f"kv cache: {cap['cache_bytes_per_slot']/1e3:.1f} KB/slot at "
+          f"{cap['kv_bits']}-bit vs {bf16_slot/1e3:.1f} KB bf16 "
+          f"({bf16_slot/cap['cache_bytes_per_slot']:.1f}x smaller)")
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i,
                     prompt=rng.integers(0, cfg.vocab_size, 6).astype(

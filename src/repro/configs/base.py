@@ -71,6 +71,9 @@ class ModelConfig:
     param_dtype: str = "bfloat16"
     compute_dtype: str = "bfloat16"
     # --- integration of the paper's technique ---
+    # quant.kv_bits additionally selects the serving KV-cache storage
+    # precision (0/16 bf16, 8 int8, 4/2 bit-dense packed; DESIGN.md §13) —
+    # a deployment knob, orthogonal to the w_bits/a_bits compute lattice.
     quant: QuantConfig = dataclasses.field(default_factory=QuantConfig)
     parallel: ParallelConfig = dataclasses.field(
         default_factory=ParallelConfig)

@@ -212,6 +212,52 @@ def unpack(packed: jax.Array, spec: PackSpec, axis: int = -1,
     return stacked.reshape(shape)
 
 
+def pack_words(q: jax.Array, bits: int, axis: int = -1) -> jax.Array:
+    """Bit-dense packing of an unsigned ``bits``-wide lattice along ``axis``.
+
+    ``32 // bits`` values land per int32 word in ascending field order (for
+    widths that don't divide 32, e.g. 3 bits -> 10 values, the top bits of
+    the word stay unused); a non-dividing tail is zero-padded (callers
+    record the true size and slice it back in :func:`unpack_words`).  This
+    is the storage layout of the sub-byte KV cache (head-dim axis) and of
+    the bit-dense weight store — true ``bits``/value HBM footprint, unlike
+    P1 lanes which trade density for MXU-ready fields.
+    """
+    if not 1 <= bits <= 32:
+        raise ValueError(f"bits must be in [1, 32], got {bits}")
+    per = 32 // bits
+    axis = axis % q.ndim
+    q = pad_to_multiple(q.astype(jnp.int32), axis, per)
+    new_shape = list(q.shape)
+    new_shape[axis] //= per
+    new_shape.insert(axis + 1, per)
+    q = q.reshape(new_shape)
+    words = jnp.zeros(new_shape[:axis + 1] + new_shape[axis + 2:], jnp.int32)
+    for j in range(per):
+        field = jax.lax.index_in_dim(q, j, axis + 1, keepdims=False)
+        words = words | (field << (bits * j))
+    return words
+
+
+def unpack_words(words: jax.Array, bits: int, size: int,
+                 axis: int = -1) -> jax.Array:
+    """Inverse of :func:`pack_words`: int32 words -> [..., size, ...] lattice
+    values (s32) along ``axis``, dropping the zero-padded tail."""
+    if not 1 <= bits <= 32:
+        raise ValueError(f"bits must be in [1, 32], got {bits}")
+    per = 32 // bits
+    axis = axis % words.ndim
+    mask = (1 << bits) - 1
+    fields = [(words >> (bits * j)) & mask for j in range(per)]
+    stacked = jnp.stack(fields, axis=axis + 1)
+    shape = list(words.shape)
+    shape[axis] *= per
+    out = stacked.reshape(shape)
+    if size == shape[axis]:
+        return out
+    return jax.lax.slice_in_dim(out, 0, size, axis=axis)
+
+
 def extract_dot(acc32: jax.Array, spec: PackSpec) -> jax.Array:
     """Shift-mask extraction of the accumulated D band from s32 packed totals.
 

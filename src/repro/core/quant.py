@@ -34,9 +34,17 @@ class QuantConfig:
     a_method: str = "lsq"
     lane_dtype: str = "int16"   # packed lane for the inference kernel
     n_pack: int = 2
-    kv_bits: int = 0            # 0 = bf16 KV cache; 8 = int8 + bf16 scales
+    # KV cache storage precision: 0 = bf16; 8 = int8 + per-(pos, kv-head)
+    # bf16 scales; 4 | 2 = bit-dense packed int32 words (pack_words along
+    # head_dim) + the same scale granularity (DESIGN.md §13).
+    kv_bits: int = 0
     # Which projections to quantize.  Attention/S SM einsums always stay fp.
     quantize_lm_head: bool = False
+
+    def __post_init__(self):
+        if self.kv_bits not in (0, 2, 4, 8, 16):
+            raise ValueError(
+                f"kv_bits must be one of 0/16/8/4/2, got {self.kv_bits}")
 
     @property
     def qmax_w(self) -> int:
@@ -49,6 +57,9 @@ class QuantConfig:
     @property
     def w_zero_point(self) -> int:
         return 1 << (self.w_bits - 1)
+
+    def replace(self, **kw) -> "QuantConfig":
+        return dataclasses.replace(self, **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -66,15 +77,25 @@ def dequantize_affine(q, scale, zero_point):
 
 
 def calibrate_absmax(x, bits, symmetric=True):
-    """absmax scale; midpoint zero-point when symmetric (weights)."""
+    """absmax scale; midpoint zero-point when symmetric (weights).
+
+    Symmetric targets ``qmax - zp`` steps above the midpoint (NOT ``zp``:
+    that would send ``+amax`` to ``2^bits``, one past ``qmax``, and the clip
+    in ``quantize_affine`` would flatten the largest-magnitude weights by a
+    full step).  ``-amax`` then lands at ``2*zp - qmax >= 0``, inside the
+    lattice.
+    """
     amax = jnp.max(jnp.abs(x))
     amax = jnp.maximum(amax, 1e-8)
+    qmax = (1 << bits) - 1
     if symmetric:
         zp = 1 << (bits - 1)
-        scale = amax / zp
+        # max(.., 1) keeps bits=1 finite (qmax == zp there: the degenerate
+        # {-amax, 0} lattice, matching the pre-fix behaviour)
+        scale = amax / max(qmax - zp, 1)
     else:
         zp = 0
-        scale = amax / ((1 << bits) - 1)
+        scale = amax / qmax
     return scale, zp
 
 

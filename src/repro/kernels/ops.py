@@ -308,23 +308,12 @@ def prepare_weights(w, w_scale, w_zp, spec: PackSpec, *,
 
 def dense_store_weights(q_w: jax.Array, w_bits: int) -> jax.Array:
     """[K, N] lattice (< 2^w_bits) -> [ceil(K/per), N] int32 bit-dense."""
-    per = 32 // w_bits
-    k, n = q_w.shape
-    q = packing.pad_to_multiple(q_w.astype(jnp.int32), 0, per)
-    q = q.reshape(-1, per, n)
-    word = jnp.zeros((q.shape[0], n), jnp.int32)
-    for j in range(per):
-        word = word | (q[:, j, :] << (w_bits * j))
-    return word
+    return packing.pack_words(q_w, w_bits, axis=0)
 
 
 def dense_load_weights(words: jax.Array, w_bits: int, k: int) -> jax.Array:
     """Inverse of dense_store_weights -> [K, N] int32 lattice."""
-    per = 32 // w_bits
-    mask = (1 << w_bits) - 1
-    parts = [(words >> (w_bits * j)) & mask for j in range(per)]
-    q = jnp.stack(parts, axis=1).reshape(-1, words.shape[-1])
-    return q[:k]
+    return packing.unpack_words(words, w_bits, k, axis=0)
 
 
 def dense_store_conv_weights(q_w: jax.Array, w_bits: int) -> jax.Array:

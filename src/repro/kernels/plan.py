@@ -49,6 +49,16 @@ VMEM_FRACTION = 0.5
 _CONV_BLOCK_H_CANDIDATES = (256, 128, 64, 32, 16, 8, 4, 2, 1)
 
 
+def default_interpret() -> bool:
+    """Pallas kernels run interpreted off-TPU (CPU validation mode).
+
+    This is the default everywhere — the KernelPlan field and every direct
+    kernel entry point resolve ``interpret`` from it, so a hand-built plan
+    or ad-hoc kernel call on a real TPU compiles instead of silently
+    falling into the (orders-of-magnitude slower) Pallas interpreter."""
+    return jax.default_backend() != "tpu"
+
+
 @dataclasses.dataclass(frozen=True)
 class KernelPlan:
     """Frozen per-layer execution plan; see module docstring.
@@ -62,7 +72,7 @@ class KernelPlan:
     op: str
     backend: str                      # 'pallas' | 'xla' (never 'auto')
     spec: PackSpec | None = None
-    interpret: bool = True
+    interpret: bool = dataclasses.field(default_factory=default_interpret)
     weight_store: str = "lanes"       # 'lanes' | 'dense'
     k_full: int | None = None         # unpacked K (dense expansion target)
     block_m: int | None = None
@@ -149,11 +159,6 @@ def resolve_backend(backend: str = "auto") -> str:
     if backend not in ("pallas", "xla"):
         raise ValueError(f"unknown backend {backend!r}")
     return backend
-
-
-def default_interpret() -> bool:
-    """Pallas kernels run interpreted off-TPU (CPU validation mode)."""
-    return jax.default_backend() != "tpu"
 
 
 # ---------------------------------------------------------------------------

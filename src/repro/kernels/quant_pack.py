@@ -18,6 +18,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.packing import PackSpec
+from repro.kernels import plan as plan_lib
 
 
 def _kernel(x_ref, s_ref, z_ref, packed_ref, rs_ref, rs_acc,
@@ -57,8 +58,14 @@ def _pad_axis(x, axis, multiple):
     jax.jit, static_argnames=("spec", "block_m", "block_k", "interpret"))
 def quantize_pack(x: jax.Array, scale: jax.Array, zero_point: jax.Array,
                   spec: PackSpec, *, block_m: int = 256, block_k: int = 512,
-                  interpret: bool = True):
-    """Quantize to the a_bits lattice and P1-pack along the last axis."""
+                  interpret: bool | None = None):
+    """Quantize to the a_bits lattice and P1-pack along the last axis.
+
+    ``interpret`` defaults from plan.default_interpret(): interpreter on CPU
+    (validation mode), compiled on TPU.
+    """
+    if interpret is None:
+        interpret = plan_lib.default_interpret()
     m, k = x.shape
     block_k = max(spec.n_pack, block_k - block_k % spec.n_pack)
     x_p = _pad_axis(_pad_axis(x, 0, block_m), 1, block_k)

@@ -34,6 +34,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.packing import PackSpec
+from repro.kernels import plan as plan_lib
 
 
 def expand_dense_taps(words: jax.Array, spec: PackSpec,
@@ -169,7 +170,7 @@ def _tiled_conv_call(kernel, x, w, *, fh, fw, block_h, block_co, out_h,
                               "interpret", "weight_store", "k_full"))
 def ulppack_conv2d(x_packed: jax.Array, w_packed: jax.Array, spec: PackSpec,
                    *, block_h: int | None = None, block_co: int = 8,
-                   padding: str = "VALID", interpret: bool = True,
+                   padding: str = "VALID", interpret: bool | None = None,
                    weight_store: str = "lanes",
                    k_full: int | None = None) -> jax.Array:
     """Packed conv2d: [N,H,W,Cp] x [Fh,Fw,Cp,Co] -> s32 [N,Ho,Wo,Co].
@@ -179,6 +180,8 @@ def ulppack_conv2d(x_packed: jax.Array, w_packed: jax.Array, spec: PackSpec,
     ``weight_store='dense'`` the weight operand is bit-dense int32 words
     [Fh, Fw, ceil(k_full/per), Co] and ``k_full`` (= Cin) is required.
     """
+    if interpret is None:
+        interpret = plan_lib.default_interpret()
     if not spec.feasible:
         raise ValueError(f"{spec} outside the overflow-free region")
     _, _, _, cp = x_packed.shape
@@ -213,8 +216,10 @@ def ulppack_conv2d(x_packed: jax.Array, w_packed: jax.Array, spec: PackSpec,
     jax.jit, static_argnames=("block_h", "block_co", "padding", "interpret"))
 def int_conv2d(q_x: jax.Array, q_w: jax.Array, *, block_h: int | None = None,
                block_co: int = 8, padding: str = "VALID",
-               interpret: bool = True) -> jax.Array:
+               interpret: bool | None = None) -> jax.Array:
     """Unpacked integer conv2d kernel (the paper's int16 baseline)."""
+    if interpret is None:
+        interpret = plan_lib.default_interpret()
     fh, fw, _, _ = q_w.shape
     q_x = _maybe_pad_spatial(q_x, fh, fw, padding)
     h, w = q_x.shape[1], q_x.shape[2]

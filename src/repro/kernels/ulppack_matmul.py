@@ -25,6 +25,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.packing import PackSpec
+from repro.kernels import plan as plan_lib
 
 
 def _kernel(a_ref, w_ref, o_ref, acc_ref, *, spec: PackSpec, chunks: int,
@@ -68,13 +69,17 @@ def _pad_axis(x, axis, multiple):
     static_argnames=("spec", "block_m", "block_n", "chunks", "interpret"))
 def ulppack_matmul(a_packed: jax.Array, w_packed: jax.Array, spec: PackSpec,
                    *, block_m: int = 128, block_n: int = 128,
-                   chunks: int = 8, interpret: bool = True) -> jax.Array:
+                   chunks: int = 8,
+                   interpret: bool | None = None) -> jax.Array:
     """Packed-lane matmul: [M, Kp] x [Kp, N] -> s32 [M, N] exact dot values.
 
-    ``interpret=True`` validates the kernel body on CPU; on TPU pass False.
+    ``interpret`` defaults from plan.default_interpret(): interpreter on CPU
+    (validation mode), compiled on TPU.
     VMEM working set per step ~= bm*bk + bk*bn lanes + (chunks+1)*bm*bn s32;
     defaults stay under 2 MiB for int16 lanes with chunks<=8.
     """
+    if interpret is None:
+        interpret = plan_lib.default_interpret()
     if not spec.feasible:
         raise ValueError(f"{spec} outside the overflow-free region")
     if a_packed.dtype != spec.lane_dtype or w_packed.dtype != spec.lane_dtype:
@@ -125,12 +130,14 @@ def _int_kernel(a_ref, w_ref, o_ref, acc_ref):
     static_argnames=("block_m", "block_n", "block_k", "interpret"))
 def int_matmul(q_a: jax.Array, q_w: jax.Array, *, block_m: int = 128,
                block_n: int = 128, block_k: int = 512,
-               interpret: bool = True) -> jax.Array:
+               interpret: bool | None = None) -> jax.Array:
     """Unpacked integer matmul kernel (s8/s16 -> s32).
 
     Baseline kernel: the paper's int16 conv2d counterpart and the W8A8 / out-
     of-region fallback path on TPU.
     """
+    if interpret is None:
+        interpret = plan_lib.default_interpret()
     m, k = q_a.shape
     _, n = q_w.shape
     a_p = _pad_axis(_pad_axis(q_a, 0, block_m), 1, block_k)

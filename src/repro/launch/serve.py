@@ -35,16 +35,28 @@ def main():
                     help="0 = greedy")
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--no-packed", action="store_true")
+    ap.add_argument("--kv-bits", type=int, default=-1,
+                    choices=(-1, 0, 16, 8, 4, 2),
+                    help="KV cache storage precision override: 0/16 = bf16, "
+                         "8 = int8, 4/2 = bit-dense packed words; -1 keeps "
+                         "the arch config's value")
+    ap.add_argument("--hbm-cache-budget-mb", type=float, default=0,
+                    help="size batch slots from this HBM cache budget "
+                         "(slots = budget // cache bytes per slot) instead "
+                         "of --max-batch")
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch, reduced=args.reduced)
+    if args.kv_bits >= 0:
+        cfg = cfg.replace(quant=cfg.quant.replace(kv_bits=args.kv_bits))
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
     eng = ServingEngine(
         cfg, params, max_batch=args.max_batch, max_len=args.max_len,
         packed=not args.no_packed, prefill_chunk=args.prefill_chunk,
         max_queue=args.max_queue or None,
         sampling=SamplingParams(temperature=args.temperature,
-                                top_k=args.top_k))
+                                top_k=args.top_k),
+        hbm_cache_budget=int(args.hbm_cache_budget_mb * 2**20) or None)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         eng.submit(Request(
@@ -54,6 +66,7 @@ def main():
             max_new_tokens=args.max_new_tokens))
     done = eng.run_to_completion()
     rep = eng.metrics.report()
+    rep["capacity"] = eng.capacity_report()
     toks = sum(len(r.output) for r in done)
     print(f"{len(done)} requests, {toks} generated tokens")
     print(json.dumps(rep, indent=2))

@@ -12,6 +12,12 @@ Quantization modes per step kind (DESIGN.md §2, §5, §12):
   decode        -> 'packed' (the deployed Sparq integer path; scan-free
                              batched packed dots so roofline FLOPs are
                              exact)
+
+The decode and prefill_chunk steps are cache-template-agnostic: the engine
+passes whatever layout ``cfg.quant.kv_bits`` selected (bf16 / int8 /
+bit-dense packed words + scales, lm.init_caches), and attention fuses the
+unpack+dequant of quantized templates into its q-chunked loop — the jitted
+step never materializes a full-precision cache (DESIGN.md §13).
 """
 
 from __future__ import annotations

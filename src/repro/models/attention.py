@@ -2,7 +2,10 @@
 query-chunked exact softmax (flash-style memory behaviour in pure JAX).
 
 Projections are quantizable Dense layers (the paper's technique applies to
-them); the score/value einsums stay bf16 (DESIGN.md §5).
+them); the score/value einsums stay bf16 (DESIGN.md §5).  The decode KV
+cache is additionally storable at int8 or sub-byte (bit-dense packed words,
+cfg.quant.kv_bits; DESIGN.md §13) with unpack+dequant fused into the
+q-chunked loop.
 """
 
 from __future__ import annotations
@@ -10,6 +13,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import packing
 from repro.models import common
 from repro.models.common import dense_apply, dense_init
 
@@ -39,51 +43,86 @@ def attention_init(key, cfg, *, cross=False, dtype=jnp.float32):
 def init_kv_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
     """Ring-buffer KV cache; SWA archs allocate only the window.
 
-    With cfg.quant.kv_bits == 8 the cache stores int8 values + per-(pos,
-    head) bf16 absmax scales — halving the dominant HBM-read term of long-
-    context decode (§Perf, beyond-paper: the paper's quantization theme
-    applied to the cache, not just the weights).
+    ``cfg.quant.kv_bits`` selects the storage precision (DESIGN.md §13):
+      0 / 16 — full ``dtype`` (bf16 in serving), the baseline.
+      8      — int8 values + per-(pos, kv-head) bf16 absmax scales (~2x).
+      4 / 2  — bit-dense int32 words (``packing.pack_words`` along head_dim,
+               ``32 // kv_bits`` values per word, zero-padded tail) + the
+               same per-(pos, kv-head) bf16 scales (~4x / ~8x).  The read
+               path never materializes the full-precision cache: unpack +
+               dequant are fused into the q-chunked attention loop.
     """
     hd = cfg.resolved_head_dim
     size = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
     kvh = cfg.num_kv_heads
-    if getattr(cfg.quant, "kv_bits", 0) == 8:
+    bits = getattr(cfg.quant, "kv_bits", 0)
+    if bits == 8:
         return {
             "k": jnp.zeros((batch, size, kvh, hd), jnp.int8),
             "v": jnp.zeros((batch, size, kvh, hd), jnp.int8),
             "k_scale": jnp.zeros((batch, size, kvh), jnp.bfloat16),
             "v_scale": jnp.zeros((batch, size, kvh), jnp.bfloat16),
         }
+    if bits in (4, 2):
+        hd_words = -(-hd // (32 // bits))
+        return {
+            "k": jnp.zeros((batch, size, kvh, hd_words), jnp.int32),
+            "v": jnp.zeros((batch, size, kvh, hd_words), jnp.int32),
+            "k_scale": jnp.zeros((batch, size, kvh), jnp.bfloat16),
+            "v_scale": jnp.zeros((batch, size, kvh), jnp.bfloat16),
+        }
+    if bits not in (0, 16):
+        raise ValueError(f"unsupported kv_bits {bits}; expected 0/16/8/4/2")
     return {
         "k": jnp.zeros((batch, size, kvh, hd), dtype),
         "v": jnp.zeros((batch, size, kvh, hd), dtype),
     }
 
 
-def _kv_quantize(x):
-    """[B,S,KVH,hd] float -> (int8 lattice, bf16 per-(pos,head) scales)."""
+def _kv_quantize(x, bits=8):
+    """[B,S,KVH,hd] float -> (stored lattice, bf16 per-(pos,head) scales).
+
+    bits == 8: signed int8 absmax (the legacy layout).  bits in (4, 2):
+    midpoint-zero-point unsigned lattice — scale targets ``qmax - zp`` steps
+    (the calibrate_absmax convention) so +amax hits exactly ``qmax`` — packed
+    bit-dense along head_dim into int32 words.  The 1e-8 scale floor keeps
+    all-zero rows (untouched cache slots, zero projections) NaN-free.
+    """
     amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
-    scale = jnp.maximum(amax / 127.0, 1e-8)
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
-                 -127, 127).astype(jnp.int8)
-    return q, scale.astype(jnp.bfloat16)
+    if bits == 8:
+        scale = jnp.maximum(amax / 127.0, 1e-8)
+        q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                     -127, 127).astype(jnp.int8)
+        return q, scale.astype(jnp.bfloat16)
+    zp = 1 << (bits - 1)
+    qmax = (1 << bits) - 1
+    scale = jnp.maximum(amax / (qmax - zp), 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]) + zp,
+                 0, qmax).astype(jnp.int32)
+    return packing.pack_words(q, bits, axis=-1), scale.astype(jnp.bfloat16)
 
 
-def _kv_dequantize(q, scale, dtype=jnp.float32):
-    # compute in the target dtype: int8 values are exact in bf16, and f32
-    # intermediates here would double the dominant decode traffic (§Perf C)
-    return q.astype(dtype) * scale.astype(dtype)[..., None]
+def _kv_dequantize(q, scale, dtype=jnp.float32, bits=8, hd=None):
+    # compute in the target dtype: the lattice values are exact in bf16, and
+    # f32 intermediates here would double the dominant decode traffic (§Perf)
+    if bits == 8:
+        return q.astype(dtype) * scale.astype(dtype)[..., None]
+    zp = 1 << (bits - 1)
+    vals = packing.unpack_words(q, bits, hd, axis=-1)
+    return (vals.astype(dtype) - zp) * scale.astype(dtype)[..., None]
 
 
-def _chunked_attention(q, k, v, mask_fn, q_positions, chunk: int):
+def _chunked_attention(q, kv_fn, mask_fn, q_positions, chunk: int):
     """Exact softmax attention, q-chunked to bound the score buffer.
 
-    q: [B, Sq, H, hd]; k/v: [B, Sk, KVH, hd]; mask_fn(qpos[chunk]) ->
-    [B, chunk, Sk] boolean validity.  Returns [B, Sq, H, hd].
+    q: [B, Sq, H, hd]; kv_fn() -> (k, v) each [B, Sk, KVH, hd] — invoked
+    INSIDE the chunk body so a quantized/bit-packed KV cache is expanded
+    (unpack + dequant) per chunk in registers/VMEM and fused into the score
+    and value einsums, never materialized at full precision across the whole
+    call; mask_fn(qpos[chunk]) -> [B, chunk, Sk] boolean validity.
+    Returns [B, Sq, H, hd].
     """
     b, sq, h, hd = q.shape
-    kvh = k.shape[2]
-    groups = h // kvh
     scale = hd ** -0.5
     # operands stay in their storage dtype (bf16 on TPU) with f32 MXU
     # accumulation — avoids materializing f32 copies of the whole KV cache
@@ -92,6 +131,9 @@ def _chunked_attention(q, k, v, mask_fn, q_positions, chunk: int):
 
     def one_chunk(qc, qpos):
         # qc: [B, C, H, hd]
+        k, v = kv_fn()
+        kvh = k.shape[2]
+        groups = h // kvh
         qg = (qc.astype(jnp.float32) * scale).astype(opd)
         qg = qg.reshape(b, qc.shape[1], kvh, groups, hd)
         scores = jnp.einsum("bckgd,bskd->bckgs", qg, k.astype(opd),
@@ -182,6 +224,7 @@ def attention_apply(p, cfg, x, *, positions, quant_mode="none",
             k = common.apply_rope(k, positions, cfg.rope_theta)
 
     window = cfg.sliding_window
+    kv_bits = getattr(cfg.quant, "kv_bits", 0)
     new_cache = None
 
     if cache is not None and cache_index is not None:
@@ -191,7 +234,7 @@ def attention_apply(p, cfg, x, *, positions, quant_mode="none",
         if idx.ndim == 0:
             # lockstep scalar path: every row writes the same slot
             slot = idx % size if window else idx
-            new_cache = _cache_write(cache, k, v, slot)
+            new_cache = _cache_write(cache, k, v, slot, kv_bits)
             kv_pos = _ring_positions(idx, size, window)        # [size]
         else:
             # per-slot positions: row b writes its window at absolute
@@ -210,10 +253,14 @@ def attention_apply(p, cfg, x, *, positions, quant_mode="none",
             wpos = idx[:, None] + offs[None, :]                # [B, sq]
             slots = wpos % size if window else wpos
             new_cache = _cache_write_ragged(
-                cache, k, v, slots, offs[None, :] < vlen[:, None])
+                cache, k, v, slots, offs[None, :] < vlen[:, None], kv_bits)
             kv_pos = _ring_positions_batch(idx + vlen - 1, size,
                                            window)            # [B, size]
-        k, v = _cache_read(new_cache, k.dtype)
+        # deferred read: _chunked_attention calls this inside the chunk
+        # body, so a packed cache is unpacked+dequantized fused with the
+        # score/value einsums (the bf16 cache copy never exists whole)
+        read_cache, kv_dtype = new_cache, k.dtype
+        kv_fn = lambda: _cache_read(read_cache, kv_dtype, kv_bits, hd)
 
         def mask_fn(qpos):
             kp = kv_pos[:, None, :] if kv_pos.ndim == 2 \
@@ -225,17 +272,18 @@ def attention_apply(p, cfg, x, *, positions, quant_mode="none",
             return m
     else:
         # ---- training / prefill ----
+        kv_fn = lambda: (k, v)  # attends over the raw (unquantized) k/v
         if cache is not None:  # prefill fills the cache
             size = cache["k"].shape[1]
             if window and sq > size:
                 # ring layout: slot = pos % size for the last `size` tokens
                 roll = (sq % size)
                 new_cache = _cache_write(cache, k[:, -size:], v[:, -size:],
-                                         0)
+                                         0, kv_bits)
                 new_cache = {kk: jnp.roll(vv, roll, axis=1)
                              for kk, vv in new_cache.items()}
             else:
-                new_cache = _cache_write(cache, k, v, 0)
+                new_cache = _cache_write(cache, k, v, 0, kv_bits)
         if kv_x is not None:
             kv_pos = (kv_positions if kv_positions is not None
                       else jnp.arange(k.shape[1]))[None, :]
@@ -260,18 +308,19 @@ def attention_apply(p, cfg, x, *, positions, quant_mode="none",
 
     if positions.ndim == 1:
         positions = jnp.broadcast_to(positions[None, :], (b, sq))
-    out = _chunked_attention(q, k, v, mask_fn, positions, q_chunk)
+    out = _chunked_attention(q, kv_fn, mask_fn, positions, q_chunk)
     out = dense_apply(p["o"], out.reshape(b, sq, cfg.num_heads * hd), **qm)
     return out, new_cache
 
 
-def _cache_write(cache, k, v, slot):
-    """Write a [B, s, KVH, hd] float slice at `slot` (quantizing if the
-    cache is int8)."""
+def _cache_write(cache, k, v, slot, kv_bits=0):
+    """Write a [B, s, KVH, hd] float slice at `slot` (quantizing — and for
+    sub-byte ``kv_bits`` word-packing along head_dim — when the cache is
+    quantized)."""
     dus = jax.lax.dynamic_update_slice_in_dim
     if "k_scale" in cache:
-        qk, sk = _kv_quantize(k)
-        qv, sv = _kv_quantize(v)
+        qk, sk = _kv_quantize(k, kv_bits)
+        qv, sv = _kv_quantize(v, kv_bits)
         return {"k": dus(cache["k"], qk, slot, 1),
                 "v": dus(cache["v"], qv, slot, 1),
                 "k_scale": dus(cache["k_scale"], sk, slot, 1),
@@ -280,7 +329,7 @@ def _cache_write(cache, k, v, slot):
             "v": dus(cache["v"], v.astype(cache["v"].dtype), slot, 1)}
 
 
-def _cache_write_ragged(cache, k, v, slots, valid):
+def _cache_write_ragged(cache, k, v, slots, valid, kv_bits=0):
     """Per-row ragged write: token j of row b lands at ring slot
     ``slots[b, j]``; tokens with ``valid[b, j]`` False are redirected out
     of bounds and dropped (scatter ``mode='drop'``), so pad tokens never
@@ -299,8 +348,8 @@ def _cache_write_ragged(cache, k, v, slots, valid):
         return buf.at[bi, tgt].set(val.astype(buf.dtype), mode="drop")
 
     if "k_scale" in cache:
-        qk, sk = _kv_quantize(k)
-        qv, sv = _kv_quantize(v)
+        qk, sk = _kv_quantize(k, kv_bits)
+        qv, sv = _kv_quantize(v, kv_bits)
         return {"k": put(cache["k"], qk), "v": put(cache["v"], qv),
                 "k_scale": put(cache["k_scale"], sk),
                 "v_scale": put(cache["v_scale"], sv)}
@@ -320,10 +369,12 @@ def _ring_positions_batch(last, size, window):
     return jnp.where(pos >= 0, pos, -1)
 
 
-def _cache_read(cache, dtype):
+def _cache_read(cache, dtype, kv_bits=0, hd=None):
     if "k_scale" in cache:
-        return (_kv_dequantize(cache["k"], cache["k_scale"], dtype),
-                _kv_dequantize(cache["v"], cache["v_scale"], dtype))
+        return (_kv_dequantize(cache["k"], cache["k_scale"], dtype,
+                               kv_bits, hd),
+                _kv_dequantize(cache["v"], cache["v_scale"], dtype,
+                               kv_bits, hd))
     return cache["k"], cache["v"]
 
 

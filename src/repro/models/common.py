@@ -156,8 +156,9 @@ def embedding_apply(p, tokens, compute_dtype=jnp.bfloat16):
             or table.shape[0] % mesh.shape["model"] != 0:
         return jnp.take(table, tokens, axis=0).astype(compute_dtype)
 
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.parallel.sharding import shard_map
 
     dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
     bspec = dp if dp and tokens.shape[0] % shlib._axis_size(mesh, dp) == 0 \

@@ -274,6 +274,19 @@ def init_caches(cfg, batch_size, max_len, dtype=jnp.bfloat16):
     return caches
 
 
+def cache_bytes(cfg, batch_size, max_len, dtype=jnp.bfloat16) -> int:
+    """HBM bytes of an ``init_caches`` tree, without allocating it.
+
+    Abstract-evals the cache template, so the number tracks whatever layout
+    ``cfg.quant.kv_bits`` selects (bf16 / int8 / bit-dense packed words +
+    scales) — the per-slot term of the serving engine's HBM admission
+    capacity (DESIGN.md §13)."""
+    shapes = jax.eval_shape(
+        lambda: init_caches(cfg, batch_size, max_len, dtype=dtype))
+    return sum(leaf.size * jnp.dtype(leaf.dtype).itemsize
+               for leaf in jax.tree.leaves(shapes))
+
+
 def loss_fn(logits, labels, aux=0.0, aux_weight=0.01):
     """Masked CE (labels < 0 are padding) + MoE load-balance aux."""
     logits = logits.astype(jnp.float32)

@@ -81,7 +81,7 @@ def all_gather_matmul(x, w, mesh, axis: str = "model"):
     x: [m, k/P] sharded on its last dim over `axis`; w: [k/P, n] sharded on
     its first dim.  Returns y [m, n] replicated over `axis`.
     """
-    from jax import shard_map
+    from repro.parallel.sharding import shard_map
 
     p = mesh.shape[axis]
 

@@ -25,6 +25,26 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` across jax versions.
+
+    The public ``jax.shard_map`` (with its ``check_vma`` replication check)
+    only exists from jax 0.5; on the pinned 0.4.x toolchain the same
+    transform lives at ``jax.experimental.shard_map.shard_map`` and spells
+    the flag ``check_rep``.  Every shard_map in the repo routes through
+    here so multi-device code (pipeline, collectives, sharded-vocab embed)
+    runs on both — the seed-failing subprocess lowerings were exactly this
+    AttributeError."""
+    try:
+        from jax import shard_map as sm
+    except ImportError:
+        from jax.experimental.shard_map import shard_map as sm
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check_vma)
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_vma=check_vma)
+
+
 def _axis_size(mesh: Mesh, axis) -> int:
     if axis is None:
         return 1

@@ -30,7 +30,8 @@ import numpy as np
 
 from repro.launch import steps as steps_lib
 from repro.models import lm
-from repro.serve.prepare import build_layer_plans, prepare_serving_params
+from repro.serve.prepare import (build_layer_plans, cache_bytes_per_slot,
+                                 prepare_serving_params)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,8 +114,23 @@ class ServingEngine:
                  max_len: int = 512, packed: bool = True, greedy=True,
                  dense_store: bool = False, prefill_chunk: int = 16,
                  max_queue: int | None = None,
-                 sampling: SamplingParams | None = None):
+                 sampling: SamplingParams | None = None,
+                 hbm_cache_budget: int | None = None):
         self.cfg = cfg
+        # Slot capacity is cache-bytes-aware: with an explicit HBM cache
+        # budget the engine admits budget // bytes-per-slot concurrent
+        # sequences, so quantized caches (cfg.quant.kv_bits in {8, 4, 2})
+        # convert their density directly into batch slots (DESIGN.md §13).
+        self.cache_bytes_per_slot = cache_bytes_per_slot(cfg, max_len)
+        if hbm_cache_budget is not None:
+            slots = int(hbm_cache_budget // self.cache_bytes_per_slot)
+            if slots < 1:
+                raise ValueError(
+                    f"hbm_cache_budget {hbm_cache_budget} < one slot's "
+                    f"cache ({self.cache_bytes_per_slot} bytes at "
+                    f"max_len {max_len})")
+            max_batch = slots
+        self.hbm_cache_budget = hbm_cache_budget
         self.max_batch = max_batch
         self.max_len = max_len
         self.prefill_chunk = max(1, int(prefill_chunk))
@@ -343,6 +359,15 @@ class ServingEngine:
         """Flat per-layer plan rows (path + KernelPlan.describe())."""
         return [{"layer": path, **plan.describe()}
                 for path, plan in sorted(self.plans.items())]
+
+    def capacity_report(self) -> dict:
+        """Cache-capacity accounting: bytes per slot and admitted slots."""
+        return {
+            "kv_bits": getattr(self.cfg.quant, "kv_bits", 0) or 16,
+            "cache_bytes_per_slot": self.cache_bytes_per_slot,
+            "hbm_cache_budget": self.hbm_cache_budget,
+            "slots": self.max_batch,
+        }
 
     def run_to_completion(self):
         """Drain queue + slots; returns every request retired since the

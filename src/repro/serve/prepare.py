@@ -100,6 +100,17 @@ def build_layer_plans(params, cfg, *, batch_rows: int = 1,
     return plans
 
 
+def cache_bytes_per_slot(cfg, max_len: int) -> int:
+    """HBM bytes one batch slot's decode caches occupy at ``max_len``.
+
+    The engine's admission-capacity term: under a fixed HBM cache budget,
+    slots = budget // cache_bytes_per_slot, so a 4-bit packed KV cache
+    (kv_bits=4) admits ~4x the concurrent sequences of bf16 (DESIGN.md §13).
+    """
+    from repro.models import lm
+    return lm.cache_bytes(cfg, 1, max_len)
+
+
 def serving_param_bytes(params) -> int:
     """HBM bytes of a serving param tree (for the memory roofline term)."""
     import jax

@@ -8,6 +8,7 @@ import pytest
 
 from repro import configs
 from repro.launch import shapes as shp
+from test_pipeline import subprocess_env
 
 
 class TestApplicability:
@@ -61,8 +62,7 @@ def test_lower_one_cell_subprocess():
     r = subprocess.run(
         [sys.executable, "-m", "repro.launch.dryrun", "--arch",
          "seamless-m4t-medium", "--shape", "decode_32k", "--lower-only"],
-        capture_output=True, text=True, timeout=900,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"})
+        capture_output=True, text=True, timeout=900, env=subprocess_env())
     assert "LOWER_OK" in r.stdout, (r.stdout[-1500:], r.stderr[-1500:])
 
 

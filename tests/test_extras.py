@@ -7,12 +7,11 @@ import textwrap
 
 import jax.numpy as jnp
 import numpy as np
-import pytest
-
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+from conftest import hypothesis_or_stubs
 
 from repro.kernels import ops
+
+given, settings, st = hypothesis_or_stubs()
 
 
 class TestDenseStorage:
@@ -48,8 +47,8 @@ class TestCollectiveMatmul:
                                        rtol=1e-4, atol=1e-4)
             print("CM_OK")
         """)
+        from test_pipeline import subprocess_env
         r = subprocess.run([sys.executable, "-c", script],
                            capture_output=True, text=True, timeout=300,
-                           env={"PYTHONPATH": "src",
-                                "PATH": "/usr/bin:/bin", "HOME": "/root"})
+                           env=subprocess_env())
         assert "CM_OK" in r.stdout, (r.stdout[-1500:], r.stderr[-1500:])

@@ -7,13 +7,14 @@ Integer paths must match EXACTLY.
 import jax.numpy as jnp
 import numpy as np
 import pytest
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+from conftest import hypothesis_or_stubs
 
 from repro.core.packing import PackSpec
 from repro.kernels import ops, ref
 from repro.kernels.ulppack_matmul import int_matmul, ulppack_matmul
 from repro.core import packing
+
+given, settings, st = hypothesis_or_stubs()
 
 
 def lattice(rng, shape, bits):

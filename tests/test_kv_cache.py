@@ -1,0 +1,292 @@
+"""Sub-byte packed KV cache (DESIGN.md §13): lattice round-trip, ring-wrap,
+zero-row scale guard, fused-vs-unfused decode parity, and cache-bytes-aware
+engine admission capacity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import packing
+from repro.core.quant import QuantConfig
+from repro.launch import steps as steps_lib
+from repro.models import attention, lm
+
+
+def kv_cfg(name, kv_bits, **kw):
+    cfg = configs.get_config(name, reduced=True)
+    return cfg.replace(param_dtype="float32", compute_dtype="float32",
+                       quant=QuantConfig(enabled=False, kv_bits=kv_bits),
+                       **kw)
+
+
+# ---------------------------------------------------------------------------
+# Lattice round-trip
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [8, 4, 2])
+def test_kv_quantize_roundtrip_on_lattice(bits):
+    """quantize -> pack -> unpack -> dequantize is exact for values already
+    on the quantized lattice (idempotence of the storage transform)."""
+    rng = np.random.default_rng(bits)
+    x = jnp.asarray(rng.normal(size=(2, 5, 3, 20)), jnp.float32)
+    stored, scale = attention._kv_quantize(x, bits)
+    once = attention._kv_dequantize(stored, scale, jnp.float32, bits, 20)
+    stored2, scale2 = attention._kv_quantize(once, bits)
+    np.testing.assert_array_equal(np.asarray(stored), np.asarray(stored2))
+    twice = attention._kv_dequantize(stored2, scale2, jnp.float32, bits, 20)
+    np.testing.assert_allclose(np.asarray(once), np.asarray(twice),
+                               rtol=1e-2, atol=1e-3)
+
+
+@pytest.mark.parametrize("bits", [4, 2])
+def test_kv_quantize_error_bound_and_extremes(bits):
+    """Max |error| <= scale/2 per element, and +/-amax round-trip exactly
+    (the calibrate_absmax qmax-zp convention)."""
+    rng = np.random.default_rng(10 + bits)
+    x = jnp.asarray(rng.normal(size=(1, 3, 2, 16)), jnp.float32)
+    stored, scale = attention._kv_quantize(x, bits)
+    dq = attention._kv_dequantize(stored, scale, jnp.float32, bits, 16)
+    err = np.abs(np.asarray(dq) - np.asarray(x))
+    # scale/2 rounding + bf16 storage of the scale itself (rel ~2^-9 over
+    # up to qmax-zp steps)
+    bound = np.asarray(scale, np.float32)[..., None] * 0.55 + 1e-5
+    assert (err <= bound).all()
+    amax = np.abs(np.asarray(x)).max(axis=-1)
+    hit = np.abs(np.abs(np.asarray(dq)).max(axis=-1) - amax)
+    np.testing.assert_allclose(hit, 0.0, atol=1e-2)
+
+
+@pytest.mark.parametrize("bits", [4, 2])
+@pytest.mark.parametrize("hd", [16, 20, 7])
+def test_kv_pack_nondividing_tails(bits, hd):
+    """head_dim that does not divide the 32/bits words-per-lane still
+    round-trips (zero-padded tail sliced back off)."""
+    rng = np.random.default_rng(bits * hd)
+    q = jnp.asarray(rng.integers(0, 1 << bits, (2, 3, 2, hd)), jnp.int32)
+    words = packing.pack_words(q, bits, axis=-1)
+    per = 32 // bits
+    assert words.shape[-1] == -(-hd // per)
+    back = packing.unpack_words(words, bits, hd, axis=-1)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(q))
+
+
+def test_kv_zero_rows_no_nan():
+    """All-zero k/v rows (untouched cache slots) hit the 1e-8 scale floor:
+    no NaN/inf anywhere in store or read-back."""
+    for bits in (8, 4, 2):
+        z = jnp.zeros((1, 4, 2, 16), jnp.float32)
+        stored, scale = attention._kv_quantize(z, bits)
+        dq = attention._kv_dequantize(stored, scale, jnp.float32, bits, 16)
+        assert np.isfinite(np.asarray(dq)).all()
+        np.testing.assert_array_equal(np.asarray(dq), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Cache layout + ring wrap
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits,itemsize", [(4, 4), (2, 4)])
+def test_init_kv_cache_packed_layout(bits, itemsize):
+    cfg = kv_cfg("granite-3-8b", bits)
+    c = attention.init_kv_cache(cfg, 2, 32)
+    hd = cfg.resolved_head_dim
+    per = 32 // bits
+    assert c["k"].dtype == jnp.int32
+    assert c["k"].shape == (2, 32, cfg.num_kv_heads, -(-hd // per))
+    assert c["k_scale"].dtype == jnp.bfloat16
+
+
+def test_unsupported_kv_bits_rejected_at_config():
+    with pytest.raises(ValueError, match="kv_bits"):
+        QuantConfig(enabled=False, kv_bits=3)
+
+
+@pytest.mark.parametrize("bits", [4, 2])
+def test_ring_wrap_past_max_len(bits):
+    """Scalar-slot writes past the ring size land at slot pos % size with
+    exactly the quantized content of the overwriting token."""
+    rng = np.random.default_rng(17)
+    size, hd = 4, 16
+    cache = {
+        "k": jnp.zeros((1, size, 2, hd * bits // 32), jnp.int32),
+        "v": jnp.zeros((1, size, 2, hd * bits // 32), jnp.int32),
+        "k_scale": jnp.zeros((1, size, 2), jnp.bfloat16),
+        "v_scale": jnp.zeros((1, size, 2), jnp.bfloat16),
+    }
+    ks = [jnp.asarray(rng.normal(size=(1, 1, 2, hd)), jnp.float32)
+          for _ in range(10)]
+    for pos, k in enumerate(ks):
+        cache = attention._cache_write(cache, k, k, pos % size, bits)
+    for slot in range(size):
+        pos = max(p for p in range(10) if p % size == slot)   # latest write
+        want, _ = attention._kv_quantize(ks[pos], bits)
+        np.testing.assert_array_equal(np.asarray(cache["k"][:, slot]),
+                                      np.asarray(want[:, 0]))
+
+
+@pytest.mark.parametrize("name", ["granite-3-8b"])
+def test_packed_kv_sliding_window_decode_consistent(name):
+    """Ragged two-slot decode over a sliding-window ring with a 4-bit cache
+    matches the same sequences decoded alone (per-row quantization is batch
+    invariant; ring wrap exercised past the window)."""
+    cfg = kv_cfg(name, 4, sliding_window=6)
+    rng = np.random.default_rng(23)
+    params = lm.init_params(jax.random.PRNGKey(23), cfg)
+    decode = steps_lib.make_decode_step(cfg)
+    lens, started = (11, 7), (0, 3)
+    toks = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+            for n in lens]
+
+    def single(t):
+        caches = lm.init_caches(cfg, 1, 16, dtype=jnp.float32)
+        logits = None
+        for i in range(len(t)):
+            logits, caches = decode(params, caches,
+                                    {"tokens": jnp.asarray(t[None, i:i + 1])},
+                                    jnp.int32(i))
+        return np.asarray(logits)[0]
+
+    refs = [single(t) for t in toks]
+    caches = lm.init_caches(cfg, 2, 16, dtype=jnp.float32)
+    assert caches[0]["attn"]["k"].dtype == jnp.int32
+    assert caches[0]["attn"]["k"].shape[1] == 6      # ring bounded by window
+    pos = np.zeros(2, np.int32)
+    last = {}
+    for tick in range(max(st + ln for st, ln in zip(started, lens))):
+        tokens = np.zeros((2, 1), np.int32)
+        valid = np.zeros(2, np.int32)
+        for s in range(2):
+            tl = tick - started[s]
+            if 0 <= tl < lens[s]:
+                tokens[s, 0] = toks[s][tl]
+                valid[s] = 1
+        logits, caches = decode(params, caches, {"tokens": jnp.array(tokens)},
+                                jnp.array(pos), jnp.array(valid))
+        for s in range(2):
+            if valid[s]:
+                pos[s] += 1
+                if tick - started[s] == lens[s] - 1:
+                    last[s] = np.asarray(logits[s])
+    for s in range(2):
+        np.testing.assert_allclose(last[s], refs[s], rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# Fused-dequant read path parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [4, 2])
+@pytest.mark.parametrize("sq,chunk", [(1, 512), (12, 4)])
+def test_fused_dequant_matches_unfused_reference(bits, sq, chunk):
+    """_chunked_attention with the packed cache expanded inside the chunk
+    body is BIT-EXACT vs first materializing the dequantized cache and
+    attending over it (same lattice, same float ops)."""
+    rng = np.random.default_rng(31 * bits + sq)
+    b, sk, h, kvh, hd = 2, 10, 4, 2, 20
+    q = jnp.asarray(rng.normal(size=(b, sq, h, hd)), jnp.float32)
+    kf = jnp.asarray(rng.normal(size=(b, sk, kvh, hd)), jnp.float32)
+    vf = jnp.asarray(rng.normal(size=(b, sk, kvh, hd)), jnp.float32)
+    cache = {}
+    cache["k"], cache["k_scale"] = attention._kv_quantize(kf, bits)
+    cache["v"], cache["v_scale"] = attention._kv_quantize(vf, bits)
+    qpos = jnp.broadcast_to(
+        (sk - sq + jnp.arange(sq))[None, :], (b, sq))
+
+    def mask_fn(qpos):
+        return qpos[:, :, None] >= jnp.arange(sk)[None, None, :]
+
+    fused = attention._chunked_attention(
+        q, lambda: attention._cache_read(cache, jnp.float32, bits, hd),
+        mask_fn, qpos, chunk)
+    k_pre, v_pre = attention._cache_read(cache, jnp.float32, bits, hd)
+    unfused = attention._chunked_attention(
+        q, lambda: (k_pre, v_pre), mask_fn, qpos, chunk)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(unfused))
+
+
+@pytest.mark.parametrize("bits,tol", [(8, 0.05), (4, 0.2), (2, 0.6)])
+def test_quantized_kv_decode_tracks_full_precision(bits, tol):
+    """Model-level: decode through a kv_bits cache stays close to the bf16
+    full forward; looser bits, looser tolerance (head_dim=20 also exercises
+    the non-dividing word tail in a real model)."""
+    cfg = kv_cfg("granite-3-8b", bits, head_dim=20)
+    rng = np.random.default_rng(7)
+    params = lm.init_params(jax.random.PRNGKey(7), cfg)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 12)), jnp.int32)
+    full, _, _ = lm.forward(params, cfg, {"tokens": tokens})
+    decode = steps_lib.make_decode_step(cfg)
+    caches = lm.init_caches(cfg, 2, 16, dtype=jnp.float32)
+    logits = None
+    for t in range(12):
+        logits, caches = decode(params, caches,
+                                {"tokens": tokens[:, t:t + 1]}, jnp.int32(t))
+    ref = np.asarray(full[:, -1])
+    got = np.asarray(logits)
+    assert np.isfinite(got).all()
+    corr = np.corrcoef(ref.ravel(), got.ravel())[0, 1]
+    assert corr > 1 - tol, corr
+
+
+# ---------------------------------------------------------------------------
+# Capacity math
+# ---------------------------------------------------------------------------
+
+def test_cache_bytes_shrink_and_budget_slots():
+    """4-bit cache bytes/slot shrink >= 3.5x vs bf16 at head_dim 64, and a
+    fixed HBM budget admits proportionally more engine slots."""
+    from repro.serve.engine import ServingEngine
+    from repro.serve.prepare import cache_bytes_per_slot
+    base = configs.get_config("stablelm-1.6b", reduced=True).replace(
+        param_dtype="float32", compute_dtype="float32", head_dim=64)
+    max_len = 128
+    bytes_of = {
+        bits: cache_bytes_per_slot(
+            base.replace(quant=QuantConfig(enabled=False, kv_bits=bits)),
+            max_len)
+        for bits in (0, 8, 4, 2)}
+    assert bytes_of[0] / bytes_of[8] >= 1.8
+    assert bytes_of[0] / bytes_of[4] >= 3.5
+    assert bytes_of[0] / bytes_of[2] >= 6.0
+
+    params = lm.init_params(
+        jax.random.PRNGKey(0),
+        base.replace(quant=QuantConfig(enabled=False, kv_bits=0)))
+    budget = 4 * bytes_of[0]
+    slots = {}
+    for bits in (0, 4):
+        cfg = base.replace(quant=QuantConfig(enabled=False, kv_bits=bits))
+        eng = ServingEngine(cfg, params, max_len=max_len, packed=False,
+                            hbm_cache_budget=budget)
+        slots[bits] = eng.max_batch
+        rep = eng.capacity_report()
+        assert rep["cache_bytes_per_slot"] == bytes_of[bits]
+        assert rep["slots"] == eng.max_batch
+    assert slots[0] == 4
+    assert slots[4] >= int(3.5 * slots[0])
+
+    with pytest.raises(ValueError, match="hbm_cache_budget"):
+        ServingEngine(base, params, max_len=max_len, packed=False,
+                      hbm_cache_budget=1)
+
+
+def test_engine_end_to_end_with_packed_kv_cache():
+    """The continuous-batching engine generates finite, reproducible output
+    through a 2-bit packed cache (write path: ragged scatter; read path:
+    fused dequant) and matches its own single-request schedule."""
+    from repro.serve.engine import Request, ServingEngine
+    cfg = kv_cfg("stablelm-1.6b", 2)
+    params = lm.init_params(jax.random.PRNGKey(5), cfg)
+    rng = np.random.default_rng(40)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (7, 3, 5)]
+
+    def run(max_batch):
+        eng = ServingEngine(cfg, params, max_batch=max_batch, max_len=32,
+                            packed=False, prefill_chunk=4)
+        for i, p in enumerate(prompts):
+            assert eng.submit(Request(uid=i, prompt=p, max_new_tokens=4))
+        return {r.uid: tuple(r.output) for r in eng.run_to_completion()}
+
+    assert run(2) == run(1)

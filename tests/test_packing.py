@@ -3,11 +3,12 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+from conftest import hypothesis_or_stubs
 
 from repro.core import packing
 from repro.core.packing import PackSpec, k_tile_bound
+
+given, settings, st = hypothesis_or_stubs()
 
 
 def lattice(rng, shape, bits):
@@ -119,6 +120,58 @@ class TestTileBoundTightness:
         total = jnp.sum(ap.astype(jnp.int32)[0] * wp.astype(jnp.int32)[:, 0])
         d = packing.extract_dot(total, spec)
         assert int(d) != k * spec.max_a * spec.max_w
+
+
+class TestPackWords:
+    """Bit-dense int32 word packing (KV cache head-dim axis, dense weight
+    store)."""
+
+    @given(st.sampled_from([1, 2, 3, 4, 5, 8, 12, 16]), st.integers(1, 40),
+           st.integers(0, 2))
+    @settings(max_examples=30, deadline=None)
+    def test_roundtrip_any_axis(self, bits, size, axis):
+        rng = np.random.default_rng(bits * size + axis)
+        shape = [3, 4, 5]
+        shape[axis] = size
+        q = lattice(rng, tuple(shape), bits)
+        words = packing.pack_words(q, bits, axis=axis)
+        per = 32 // bits
+        assert words.shape[axis] == -(-size // per)
+        assert words.dtype == jnp.int32
+        back = packing.unpack_words(words, bits, size, axis=axis)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(q))
+
+    def test_footprint_is_bit_exact_when_dividing(self):
+        for bits in (2, 4, 8):
+            per = 32 // bits
+            q = jnp.zeros((2, per * 6), jnp.int32)
+            words = packing.pack_words(q, bits, axis=-1)
+            assert words.size * 32 == q.size * bits
+
+    def test_nondividing_tail_is_zero_padded(self):
+        q = jnp.full((1, 9), 15, jnp.int32)           # per=8 for 4 bits
+        words = packing.pack_words(q, 4, axis=-1)
+        assert words.shape == (1, 2)
+        assert int(words[0, 1]) == 15                 # only field 0 occupied
+
+    def test_nondividing_bits_roundtrip(self):
+        """3-bit packs 10 values/word (top 2 bits unused) — the dense
+        weight store supports every 1..8-bit lattice, not only dividers
+        of 32."""
+        rng = np.random.default_rng(3)
+        q = lattice(rng, (21, 5), 3)
+        words = packing.pack_words(q, 3, axis=0)
+        assert words.shape[0] == -(-21 // 10)
+        np.testing.assert_array_equal(
+            np.asarray(packing.unpack_words(words, 3, 21, axis=0)),
+            np.asarray(q))
+
+    def test_invalid_bits_raise(self):
+        q = jnp.zeros((2, 8), jnp.int32)
+        with pytest.raises(ValueError):
+            packing.pack_words(q, 0)
+        with pytest.raises(ValueError):
+            packing.unpack_words(q, 33, 8)
 
 
 class TestPackedMatmulReference:

@@ -2,11 +2,24 @@
 validated against sequential stage application (subprocess so the 2-device
 XLA flag cannot leak into other tests)."""
 
+import os
 import subprocess
 import sys
 import textwrap
 
 import pytest
+
+
+def subprocess_env():
+    """Scrubbed env for hermetic subprocess lowerings, with the operator's
+    jax backend pins passed through: without them the child falls into
+    backend autodetection, which can hang for minutes (or grab a device)
+    on hosts that pin JAX_PLATFORMS — the seed-failing env assumption."""
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}
+    for var in ("JAX_PLATFORMS", "JAX_PLATFORM_NAME"):
+        if var in os.environ:
+            env[var] = os.environ[var]
+    return env
 
 SCRIPT = textwrap.dedent("""
     import os
@@ -39,7 +52,5 @@ SCRIPT = textwrap.dedent("""
 @pytest.mark.slow
 def test_gpipe_two_stages_subprocess():
     r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
-                       text=True, timeout=300,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
+                       text=True, timeout=300, env=subprocess_env())
     assert "PIPELINE_OK" in r.stdout, (r.stdout[-2000:], r.stderr[-2000:])

@@ -60,6 +60,28 @@ class TestPlanner:
                                         padding="VALID", backend="xla")
         assert p.block_h <= 8   # out_h = 10 - 3 + 1
 
+    def test_interpret_defaults_from_device(self):
+        """Regression: hand-built plans and direct kernel calls must default
+        ``interpret`` from the device (interpreter only off-TPU), not a
+        hard-coded True that would silently interpret on TPU."""
+        import inspect
+
+        import jax
+
+        from repro.kernels import quant_pack, ulppack_conv2d, ulppack_matmul
+
+        want = jax.default_backend() != "tpu"
+        assert plan_lib.default_interpret() == want
+        hand_built = plan_lib.KernelPlan(op="int_matmul", backend="xla")
+        assert hand_built.interpret == want
+        planned = plan_lib.plan_int_matmul(8, 32, 16, backend="xla")
+        assert planned.interpret == hand_built.interpret == want
+        for fn in (quant_pack.quantize_pack, ulppack_matmul.ulppack_matmul,
+                   ulppack_matmul.int_matmul, ulppack_conv2d.ulppack_conv2d,
+                   ulppack_conv2d.int_conv2d):
+            sig = inspect.signature(fn)
+            assert sig.parameters["interpret"].default is None, fn
+
     def test_describe_reports_tiles(self):
         p = plan_lib.plan_packed_conv2d((1, 64, 64, 16), (7, 7, 16, 32),
                                         SPEC, padding="SAME", backend="xla")

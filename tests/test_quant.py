@@ -4,10 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+from conftest import hypothesis_or_stubs
 
 from repro.core import quant, vmacsr
+
+given, settings, st = hypothesis_or_stubs()
 
 
 class TestAffine:
@@ -41,6 +42,34 @@ class TestAffine:
         w = jnp.asarray(rng.normal(size=(128,)), jnp.float32)
         for bits in (2, 3, 4, 8):
             assert float(quant.sawb_scale(w, bits)) > 0
+
+    @pytest.mark.parametrize("bits", [2, 3, 4, 8])
+    def test_absmax_symmetric_extremes_roundtrip(self, bits):
+        """+amax must land exactly on qmax (regression: the old scale
+        targeted zp steps, sending +amax to 2^bits, which the clip in
+        quantize_affine flattened by a full step) and -amax on 2*zp - qmax;
+        both dequantize back to +/-amax exactly."""
+        amax = 1.7
+        x = jnp.asarray([-amax, -amax / 3, 0.0, amax / 2, amax], jnp.float32)
+        scale, zp = quant.calibrate_absmax(x, bits, symmetric=True)
+        qmax = (1 << bits) - 1
+        q = quant.quantize_affine(x, scale, zp, bits)
+        assert int(q[-1]) == qmax
+        assert int(q[0]) == 2 * zp - qmax
+        dq = np.asarray(quant.dequantize_affine(q, scale, zp))
+        np.testing.assert_allclose(dq[-1], amax, rtol=1e-6)
+        np.testing.assert_allclose(dq[0], -amax, rtol=1e-6)
+        # interior points stay within half a step
+        assert np.abs(dq - np.asarray(x)).max() <= float(scale) / 2 + 1e-6
+
+    def test_absmax_symmetric_bits1_stays_finite(self):
+        """bits=1 has qmax == zp; the qmax-zp denominator must clamp to 1
+        (degenerate {-amax, 0} lattice) instead of producing scale=inf."""
+        x = jnp.asarray([-2.0, 0.5, 2.0], jnp.float32)
+        scale, zp = quant.calibrate_absmax(x, 1, symmetric=True)
+        assert np.isfinite(float(scale)) and float(scale) == 2.0 and zp == 1
+        q = quant.quantize_affine(x, scale, zp, 1)
+        assert int(q.min()) >= 0 and int(q.max()) <= 1
 
 
 class TestSTE:
