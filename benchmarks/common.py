@@ -1,22 +1,34 @@
-"""Shared benchmark helpers: timing, cost analysis, CSV + JSON emission."""
+"""Shared benchmark helpers: timing, cost analysis, CSV + JSON emission,
+and the standardized record schema the CI perf-regression gate consumes
+(benchmarks/compare.py; DESIGN.md §14)."""
 
 from __future__ import annotations
 
 import json
 import os
-import time
 
 import jax
 import numpy as np
 
+#: Version of the BENCH_*.json payload layout ({"bench", "schema", "rows"}).
+#: compare.py refuses to gate across schema versions.
+BENCH_SCHEMA = 1
 
-def wall_us(fn, *args, iters: int = 5, warmup: int = 2) -> float:
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / iters * 1e6
+
+def wall_us(fn, *args, iters: int = 5, warmup: int = 2, repeats: int = 3,
+            min_time_s: float = 0.01) -> float:
+    """Median-of-``repeats`` wall time per call in microseconds.
+
+    Delegates to kernels/autotune.measure_us so benchmarks and the
+    autotuner share one timing methodology: each sample times a batch of
+    calls whose size starts at ``iters`` and doubles until a batch takes at
+    least ``min_time_s`` — fixed-iteration timing at timer resolution is
+    what made the old ``iters=5`` numbers flake on noisy CI runners.
+    """
+    from repro.kernels.autotune import measure_us
+
+    return measure_us(fn, *args, repeats=repeats, min_time_s=min_time_s,
+                      iters=iters, warmup=warmup)
 
 
 def normalize_cost(c) -> dict:
@@ -32,6 +44,70 @@ def cost_of(fn, *args) -> dict:
     c = normalize_cost(jax.jit(fn).lower(*args).compile().cost_analysis())
     return {"flops": float(c.get("flops", 0.0) or 0.0),
             "bytes": float(c.get("bytes accessed", 0.0) or 0.0)}
+
+
+# ---------------------------------------------------------------------------
+# Record schema: every bench row should carry a stable case identity so two
+# runs can be diffed row-by-row.  New rows use ``record``; ``row_case``
+# derives an identity for rows predating the schema.
+# ---------------------------------------------------------------------------
+
+#: Legacy identity keys, in lookup order (fig4 'impl', table2/serve 'path',
+#: engine 'engine', kv sweep 'kv_bits', ...), then composite identities
+#: (fig5 precision grid, roofline cells).
+_CASE_KEYS = ("case", "impl", "path", "engine", "kv_bits", "name", "cell")
+_CASE_GROUPS = (("mode", "w_bits", "a_bits"), ("arch", "shape", "mesh"),
+                ("weight_store", "block_h"))
+
+
+def record(case: str, **fields) -> dict:
+    """One standardized bench row: a stable ``case`` id + metric fields."""
+    return {"case": str(case), **fields}
+
+
+def row_case(row: dict, index: int = 0) -> str:
+    """Stable identity of a bench row (falls back to its position)."""
+    for key in _CASE_KEYS:
+        if key in row:
+            return f"{key}={row[key]}" if key != "case" else str(row[key])
+    for group in _CASE_GROUPS:
+        if all(k in row for k in group):
+            return "|".join(f"{k}={row[k]}" for k in group)
+    return f"row{index}"
+
+
+def tuned_vs_heuristic_row(case: str, heur_plan, tuned_plan,
+                           run_plan) -> dict:
+    """The standard tuned-vs-heuristic record (fig4 conv, serve linear):
+    time ``run_plan(plan)`` under both plans and emit the gate-facing
+    speedup.  On a cache miss the tuned plan equals the heuristic, so it
+    is timed once and the speedup is exactly 1.0 (DESIGN.md §14)."""
+    heur_us = wall_us(lambda: run_plan(heur_plan), iters=1, warmup=1)
+    tuned_us = heur_us if tuned_plan == heur_plan else \
+        wall_us(lambda: run_plan(tuned_plan), iters=1, warmup=1)
+    return record(case,
+                  heuristic_us=round(heur_us, 1),
+                  tuned_us=round(tuned_us, 1),
+                  tuned_speedup=round(heur_us / tuned_us, 2),
+                  plan_source=tuned_plan.source, plan=str(tuned_plan))
+
+
+#: Metric direction rules: suffix/substring -> better direction.  Metrics
+#: matching neither are informational (never compared numerically).
+_LOWER_BETTER = ("_us", "_bytes", "_seconds", "seconds", "instr_per_k",
+                 "mean_admission_wait_s", "cache_bytes_per_slot")
+_HIGHER_BETTER = ("tok_s", "speedup", "_vs_bf16", "slots", "occupancy")
+
+
+def metric_direction(name: str) -> str | None:
+    """'lower' / 'higher' = which way is better; None = not a perf metric."""
+    for suffix in _LOWER_BETTER:
+        if name.endswith(suffix):
+            return "lower"
+    for mark in _HIGHER_BETTER:
+        if mark in name:
+            return "higher"
+    return None
 
 
 def emit(rows, header):
@@ -59,9 +135,11 @@ def jsonable(obj):
 
 def write_bench_json(name: str, payload, out_dir: str = ".") -> str:
     """Persist one benchmark's rows as BENCH_<name>.json (the artifact the
-    bench-smoke CI lane uploads so perf trajectory is recorded per PR)."""
+    bench-smoke CI lane uploads and compare.py gates against)."""
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, f"BENCH_{name}.json")
+    if isinstance(payload, dict):
+        payload.setdefault("schema", BENCH_SCHEMA)
     with open(path, "w") as f:
         json.dump(jsonable(payload), f, indent=2, sort_keys=True)
     return path

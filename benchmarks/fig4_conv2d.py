@@ -20,7 +20,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import cost_of, emit, wall_us
+from benchmarks.common import (cost_of, emit, tuned_vs_heuristic_row,
+                               wall_us)
 from repro.core import packing, vmacsr
 from repro.core.packing import PackSpec
 from repro.kernels import ops, ref
@@ -28,6 +29,7 @@ from repro.kernels import plan as plan_lib
 from repro.kernels.ulppack_conv2d import ulppack_conv2d
 
 H = W = 256
+QUICK_HW = 64          # --quick spatial size (CI lane)
 CIN = 32
 COUT = 32
 FH = FW = 7
@@ -44,7 +46,7 @@ def _useful_macs(out_h, out_w):
 def run(quick: bool = False):
     global H, W
     if quick:
-        h = w = 64
+        h = w = QUICK_HW
     else:
         h = w = H
     rng = np.random.default_rng(0)
@@ -130,6 +132,7 @@ def run(quick: bool = False):
                 "useful_macs", "instr_per_k", "modeled_speedup",
                 "measured_speedup", "paper_speedup", "plan"])
     _sweep_block_h(rng, h, w, quick)
+    rows += _tuned_vs_heuristic(rng, h, w)
     return rows
 
 
@@ -175,6 +178,36 @@ def _sweep_block_h(rng, h, w, quick):
             })
     emit(rows, ["weight_store", "block_h", "tiles", "vmem_bytes",
                 "vmem_frac", "wall_us", "plan"])
+
+
+def _tuned_vs_heuristic(rng, h, w):
+    """Autotuned plan vs the static heuristic at the paper's conv shape
+    (both weight stores), measured through the same Pallas dispatch.  On a
+    cache miss the tuned plan IS the heuristic (source='heuristic',
+    speedup 1.0) — the row then records that no tuning data was available
+    (DESIGN.md §14)."""
+    spec = PackSpec(2, 2, jnp.int16.dtype)
+    q_x = _lattice(rng, (1, h, w, CIN), spec.a_bits)
+    q_w = _lattice(rng, (FH, FW, CIN, COUT), spec.w_bits)
+    xp = packing.pack_activations(q_x, spec, axis=-1)
+    wp = packing.pack_weights(q_w, spec, axis=2)
+    wd = ops.dense_store_conv_weights(q_w, spec.w_bits)
+    rows = []
+    for store, wt in (("lanes", wp), ("dense", wd)):
+        kw = dict(padding="VALID", backend="pallas", weight_store=store,
+                  k_full=CIN if store == "dense" else None)
+        heur = plan_lib.plan_packed_conv2d(
+            tuple(xp.shape), tuple(wt.shape), spec,
+            use_tuning_cache=False, **kw)
+        tuned = plan_lib.plan_packed_conv2d(
+            tuple(xp.shape), tuple(wt.shape), spec, **kw)
+        rows.append(tuned_vs_heuristic_row(
+            f"tuned-vs-heuristic/{store}", heur, tuned,
+            lambda plan, wt=wt: ops.packed_conv2d(
+                xp, wt, spec, padding="VALID", plan=plan)))
+    emit(rows, ["case", "heuristic_us", "tuned_us", "tuned_speedup",
+                "plan_source", "plan"])
+    return rows
 
 
 if __name__ == "__main__":

@@ -22,9 +22,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import cost_of, emit, wall_us
+from benchmarks.common import (cost_of, emit, tuned_vs_heuristic_row,
+                               wall_us)
+from repro.core import packing
 from repro.core.packing import PackSpec
 from repro.kernels import ops
+from repro.kernels import plan as plan_lib
 
 
 def run_linear(quick: bool = False):
@@ -72,6 +75,36 @@ def run_linear(quick: bool = False):
                      "weight_bytes": wp.size * 2})
 
     emit(rows, ["path", "wall_us", "flops", "bytes", "weight_bytes"])
+    rows += _tuned_vs_heuristic_linear()
+    return rows
+
+
+#: The decode-shaped linear the tuned-vs-heuristic row (and run.warm_tune)
+#: benchmarks through the Pallas tile grid.
+TUNED_LINEAR_SHAPE = (8, 256, 256)
+
+
+def _tuned_vs_heuristic_linear():
+    """Decode-shaped Pallas packed matmul under the autotuned plan vs the
+    static heuristic (the fused-kernel tile grid is where the autotuner's
+    wins live; the XLA rows above ignore tile choice).  Cache miss ->
+    tuned == heuristic, speedup 1.0 (DESIGN.md §14)."""
+    m, k, n = TUNED_LINEAR_SHAPE
+    spec = PackSpec(2, 2, jnp.int16.dtype)
+    rng = np.random.default_rng(1)
+    q_a = jnp.asarray(rng.integers(0, spec.max_a + 1, (m, k)), jnp.int32)
+    q_w = jnp.asarray(rng.integers(0, spec.max_w + 1, (k, n)), jnp.int32)
+    ap = packing.pack_activations(q_a, spec, axis=-1)
+    wp = packing.pack_weights(q_w, spec, axis=0)
+    kp = ap.shape[-1]
+    heur = plan_lib.plan_packed_matmul(m, kp, n, spec, backend="pallas",
+                                       use_tuning_cache=False)
+    tuned = plan_lib.plan_packed_matmul(m, kp, n, spec, backend="pallas")
+    rows = [tuned_vs_heuristic_row(
+        "tuned-vs-heuristic/packed-W2A2", heur, tuned,
+        lambda plan: ops.packed_matmul(ap, wp, spec, plan=plan))]
+    emit(rows, ["case", "heuristic_us", "tuned_us", "tuned_speedup",
+                "plan_source", "plan"])
     return rows
 
 

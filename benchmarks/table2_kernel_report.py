@@ -21,8 +21,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, normalize_cost
+from benchmarks.common import emit, normalize_cost, record
 from repro.core.packing import PackSpec
+from repro.kernels import autotune
 from repro.kernels import ops
 from repro.kernels import plan as plan_lib
 
@@ -114,6 +115,41 @@ def run(quick: bool = False):
 
     emit(rows, ["path", "flops", "bytes", "intensity_flops_per_byte",
                 "float_type_mentions", "int_type_mentions", "weight_bytes"])
+    rows += _autotune_report(spec, kp)
+    return rows
+
+
+def _autotune_report(spec, kp):
+    """Heuristic-vs-tuned per planned signature, straight from the autotune
+    cache (entries persist the measured winner + heuristic timing, so this
+    report costs no re-measurement; DESIGN.md §14)."""
+    keys = {
+        "matmul-decode": autotune.matmul_key(M, kp, N, spec,
+                                             backend="pallas"),
+        "conv-lanes": autotune.conv2d_key(
+            (1, 256, 256, 16), (7, 7, 16, 32), spec, padding="VALID",
+            backend="pallas"),
+        "conv-dense": autotune.conv2d_key(
+            (1, 256, 256, 16), (7, 7, 2, 32), spec, padding="VALID",
+            backend="pallas", weight_store="dense"),
+    }
+    rows = []
+    for name, key in keys.items():
+        entry = autotune.lookup(key)
+        if entry is None:
+            rows.append(record(f"autotune/{name}", plan_source="heuristic",
+                               tuned_speedup=1.0))
+            continue
+        heur_us = entry.get("heuristic_us") or 0.0
+        tuned_us = entry.get("wall_us") or 0.0
+        rows.append(record(
+            f"autotune/{name}", plan_source="tuned",
+            tuned_us=tuned_us, heuristic_us=heur_us,
+            tuned_speedup=round(heur_us / tuned_us, 2) if tuned_us else 1.0,
+            vmem_bytes=entry.get("vmem_bytes", 0),
+            candidates=entry.get("candidates", 0)))
+    emit(rows, ["case", "plan_source", "heuristic_us", "tuned_us",
+                "tuned_speedup", "vmem_bytes", "candidates"])
     return rows
 
 

@@ -1,0 +1,527 @@
+"""Empirical KernelPlan autotuner with a persisted, schema-versioned cache.
+
+The static planners in kernels/plan.py pick tile sizes from closed-form VMEM
+accounting — correct, but shape-agnostic beyond the budget test.  Sparq's
+speedups (3.2x at 2-bit, 1.7x at 4-bit over int16) come from matching the
+schedule to the hardware's vector geometry per shape, and FullPack makes the
+same point for lane layout: sub-byte throughput is won or lost in per-shape
+tile selection.  This module is the software analogue — an offline
+measurement pass over a *bounded* candidate grid:
+
+  * ``tune_packed_matmul``   — block_m / block_n / chunks
+  * ``tune_packed_conv2d``   — block_h / block_co
+  * ``tune_attention_chunk`` — q-chunk of the fused-dequant attention loop
+
+Winners are persisted to a JSON tuning cache (``reports/autotune_<device>.
+json``; the CPU cache is committed so CI plans deterministically).  The
+planners consult the *active* cache first and fall back to their heuristics
+on miss; plans stay frozen/``lru_cache``d, so dispatch cost is unchanged
+(DESIGN.md §14).
+
+Cache discipline:
+  * schema-versioned — a stale or corrupt file is ignored with a warning,
+    never an error (the heuristics always work);
+  * keyed by kernel signature: op kind, shapes, PackSpec, weight storage,
+    backend — and scoped to one device kind per file;
+  * entries record the winner's tiles plus measured ``wall_us`` and the
+    heuristic's ``heuristic_us`` so benchmarks can report tuned-vs-heuristic
+    without re-measuring.
+
+``measure_us`` is the shared timing primitive (median-of-repeats with a
+minimum total measurement time); benchmarks/common.py delegates to it so the
+CI perf-regression gate and the tuner agree on methodology.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import os
+import time
+import warnings
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing
+from repro.core.packing import PackSpec
+from repro.kernels import plan as plan_lib
+from repro.roofline import hw
+
+SCHEMA_VERSION = 1
+
+#: Environment override for the cache file the active cache loads from.
+ENV_CACHE = "REPRO_AUTOTUNE_CACHE"
+
+#: Candidate grids (bounded by construction; the budget filter shrinks them
+#: further per shape).
+MATMUL_BLOCK_M = (16, 32, 64, 128, 256)
+MATMUL_BLOCK_N = (32, 64, 128, 256)
+MATMUL_CHUNKS = (1, 2, 4, 8, 16)
+CONV_BLOCK_CO = (4, 8, 16, 32)
+ATTN_CHUNKS = (32, 64, 128, 256, 512)
+
+_REPO_ROOT = Path(__file__).resolve().parents[3]
+
+
+def device_kind() -> str:
+    """The device axis of the cache key space ('cpu' / 'tpu' / 'gpu')."""
+    return jax.default_backend()
+
+
+def default_cache_path(device: str | None = None) -> str:
+    """$REPRO_AUTOTUNE_CACHE if set, else reports/autotune_<device>.json
+    at the repo root (so tests and benchmarks agree regardless of CWD)."""
+    env = os.environ.get(ENV_CACHE)
+    if env:
+        return env
+    return str(_REPO_ROOT / "reports"
+               / f"autotune_{device or device_kind()}.json")
+
+
+# ---------------------------------------------------------------------------
+# Cache keys — human-readable, deterministic strings
+# ---------------------------------------------------------------------------
+
+def matmul_key(m: int, kp: int, n: int, spec: PackSpec, *, backend: str,
+               weight_store: str = "lanes") -> str:
+    return (f"packed_matmul|{backend}|m={m}|kp={kp}|n={n}|spec={spec}"
+            f"|store={weight_store}")
+
+
+def conv2d_key(x_shape: tuple, w_shape: tuple, spec: PackSpec, *,
+               padding: str, backend: str,
+               weight_store: str = "lanes") -> str:
+    xs = "x".join(str(d) for d in x_shape)
+    ws = "x".join(str(d) for d in w_shape)
+    return (f"packed_conv2d|{backend}|x={xs}|w={ws}|pad={padding}"
+            f"|spec={spec}|store={weight_store}")
+
+
+def attention_key(b: int, sq: int, skv: int, h: int, kvh: int, hd: int,
+                  kv_bits: int) -> str:
+    return (f"attention_chunk|b={b}|sq={sq}|skv={skv}|h={h}|kvh={kvh}"
+            f"|hd={hd}|kv_bits={kv_bits}")
+
+
+# ---------------------------------------------------------------------------
+# TuningCache: load / lookup / store / save
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TuningCache:
+    """One device's tuning results: {signature key: winner entry}."""
+
+    device: str
+    entries: dict = dataclasses.field(default_factory=dict)
+    path: str | None = None
+
+    def lookup(self, key: str) -> dict | None:
+        return self.entries.get(key)
+
+    def store(self, key: str, entry: dict) -> None:
+        self.entries[key] = entry
+
+    def to_json(self) -> dict:
+        return {"schema": SCHEMA_VERSION, "device": self.device,
+                "entries": self.entries}
+
+    def save(self, path: str | None = None) -> str:
+        path = path or self.path or default_cache_path(self.device)
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=2, sort_keys=True)
+            f.write("\n")
+        self.path = path
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "TuningCache | None":
+        """Parse a cache file; corrupt or stale-schema files are ignored
+        with a warning (the planner heuristics remain the fallback)."""
+        if not os.path.exists(path):
+            return None
+        try:
+            with open(path) as f:
+                raw = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            warnings.warn(f"ignoring corrupt autotune cache {path}: {e}",
+                          stacklevel=2)
+            return None
+        if not isinstance(raw, dict) or raw.get("schema") != SCHEMA_VERSION:
+            warnings.warn(
+                f"ignoring autotune cache {path}: schema "
+                f"{raw.get('schema') if isinstance(raw, dict) else '?'} != "
+                f"{SCHEMA_VERSION}", stacklevel=2)
+            return None
+        entries = raw.get("entries")
+        if not isinstance(entries, dict):
+            warnings.warn(f"ignoring autotune cache {path}: no entries dict",
+                          stacklevel=2)
+            return None
+        return cls(device=raw.get("device", "unknown"), entries=entries,
+                   path=path)
+
+
+# ---------------------------------------------------------------------------
+# Active cache (what the planners consult)
+# ---------------------------------------------------------------------------
+
+_UNSET = object()
+_active: TuningCache | object | None = _UNSET
+
+
+def active_cache() -> TuningCache:
+    """The process-wide cache the planners consult.  Lazily loaded from
+    ``default_cache_path()`` on first use; an empty per-device cache when
+    no file exists (every lookup then misses -> heuristics)."""
+    global _active
+    if _active is _UNSET:
+        dev = device_kind()
+        _active = (TuningCache.load(default_cache_path(dev))
+                   or TuningCache(device=dev))
+    return _active
+
+
+def set_active_cache(cache: TuningCache) -> TuningCache:
+    """Install a cache and invalidate every memoized plan built under the
+    previous one (plans are frozen per process otherwise)."""
+    global _active
+    _active = cache
+    plan_lib.clear_plan_cache()
+    attention_chunk_for.cache_clear()
+    return cache
+
+
+def load_cache(path: str) -> TuningCache:
+    """Load + activate ``path`` (empty active cache if unreadable)."""
+    return set_active_cache(TuningCache.load(path)
+                            or TuningCache(device=device_kind()))
+
+
+def reset_active_cache() -> None:
+    """Back to the lazy default (tests; device changes)."""
+    global _active
+    _active = _UNSET
+    plan_lib.clear_plan_cache()
+    attention_chunk_for.cache_clear()
+
+
+def lookup(key: str) -> dict | None:
+    """Planner-facing lookup against the active cache (never raises)."""
+    try:
+        return active_cache().lookup(key)
+    except Exception as e:  # a broken cache must never break planning
+        warnings.warn(f"autotune lookup failed: {e}", stacklevel=2)
+        return None
+
+
+def _store(cache: TuningCache, key: str, entry: dict) -> None:
+    """Store a tuning result; writes to the ACTIVE cache invalidate every
+    memoized plan so later planner calls see the new entry."""
+    cache.store(key, entry)
+    if cache is _active:
+        plan_lib.clear_plan_cache()
+        attention_chunk_for.cache_clear()
+
+
+# ---------------------------------------------------------------------------
+# Timing: median-of-repeats with a minimum total measurement time
+# ---------------------------------------------------------------------------
+
+def measure_us(fn, *args, repeats: int = 3, min_time_s: float = 0.01,
+               iters: int = 1, max_calls: int = 256,
+               warmup: int = 1) -> float:
+    """Median-of-``repeats`` wall time per call, in microseconds.
+
+    Each sample times a batch of calls; the batch size starts at ``iters``
+    and doubles until one batch takes at least ``min_time_s`` (capped at
+    ``max_calls``), so fast kernels are not measured at timer resolution and
+    the CI regression gate does not flake on noisy runners.  The first
+    (timed) calibration batch also absorbs any remaining compilation."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+
+    def batch(ncalls: int) -> float:
+        t0 = time.perf_counter()
+        for _ in range(ncalls):
+            jax.block_until_ready(fn(*args))
+        return time.perf_counter() - t0
+
+    n = max(1, int(iters))
+    dt = batch(n)
+    while dt < min_time_s and n < max_calls:
+        n = min(n * 2, max_calls)
+        dt = batch(n)
+    samples = [dt / n]
+    for _ in range(max(0, repeats - 1)):
+        samples.append(batch(n) / n)
+    return float(np.median(samples) * 1e6)
+
+
+# ---------------------------------------------------------------------------
+# Candidate grids
+# ---------------------------------------------------------------------------
+
+def _pow2_cap(grid, dim: int):
+    """Drop grid points whose predecessor already covers ``dim`` (a block
+    twice the problem size only adds padding, never a new schedule)."""
+    out = []
+    for g in grid:
+        out.append(g)
+        if g >= dim:
+            break
+    return out
+
+
+def _bound(cands: list, limit: int) -> list:
+    """Deterministically subsample an over-long candidate list."""
+    if len(cands) <= limit:
+        return cands
+    step = len(cands) / limit
+    return [cands[int(i * step)] for i in range(limit)]
+
+
+def matmul_candidates(m: int, kp: int, n: int, spec: PackSpec,
+                      budget: int, *, limit: int = 16) -> list[tuple]:
+    """(block_m, block_n, chunks) triples under the VMEM budget."""
+    cands = []
+    for bm in _pow2_cap(MATMUL_BLOCK_M, m):
+        for bn in _pow2_cap(MATMUL_BLOCK_N, n):
+            for ch in MATMUL_CHUNKS:
+                if ch * spec.k_tile > 2 * kp:
+                    break
+                if plan_lib.matmul_working_set(bm, bn, ch, spec) <= budget:
+                    cands.append((bm, bn, ch))
+    return _bound(cands, limit)
+
+
+def conv2d_candidates(out_h: int, co: int, ws_fn, budget: int, *,
+                      limit: int = 12) -> list[tuple]:
+    """(block_h, block_co) pairs under the VMEM budget; ``ws_fn(bh, bco)``
+    is the planner's working-set estimate for the shape being tuned."""
+    bhs = sorted({min(b, out_h)
+                  for b in plan_lib._CONV_BLOCK_H_CANDIDATES + (out_h,)})
+    bcos = sorted({min(b, co) for b in CONV_BLOCK_CO})
+    cands = [(bh, bco) for bh in bhs for bco in bcos
+             if ws_fn(bh, bco) <= budget]
+    return _bound(cands, limit)
+
+
+# ---------------------------------------------------------------------------
+# Tuners (offline: measure candidates, persist the winner)
+# ---------------------------------------------------------------------------
+
+def _entry(best: tuple, heuristic_us: float, n_cands: int,
+           **tiles) -> dict:
+    wall, vmem = best
+    e = dict(tiles)
+    e.update({"wall_us": round(wall, 2),
+              "heuristic_us": round(heuristic_us, 2),
+              "vmem_bytes": int(vmem), "candidates": n_cands})
+    return e
+
+
+def tune_packed_matmul(m: int, kp: int, n: int, spec: PackSpec, *,
+                       backend: str = "auto", weight_store: str = "lanes",
+                       k_full: int | None = None,
+                       vmem_budget: int | None = None,
+                       cache: TuningCache | None = None,
+                       max_candidates: int = 16, repeats: int = 3,
+                       force: bool = False, seed: int = 0) -> dict:
+    """Benchmark the (block_m, block_n, chunks) grid for one matmul
+    signature and store the winner in ``cache`` (active cache default)."""
+    from repro.kernels import ops  # registers the backends
+
+    backend = plan_lib.resolve_backend(backend)
+    cache = cache if cache is not None else active_cache()
+    if weight_store == "dense" and k_full is None:
+        k_full = kp * spec.n_pack
+    key = matmul_key(m, kp, n, spec, backend=backend,
+                     weight_store=weight_store)
+    if not force:
+        hit = cache.lookup(key)
+        if hit is not None:
+            return hit
+    budget = vmem_budget or int(hw.VMEM_PER_CORE * plan_lib.VMEM_FRACTION)
+    heur = plan_lib.plan_packed_matmul(
+        m, kp, n, spec, backend=backend, weight_store=weight_store,
+        k_full=k_full, vmem_budget=vmem_budget, use_tuning_cache=False)
+
+    rng = np.random.default_rng(seed)
+    k = k_full if k_full is not None else kp * spec.n_pack
+    q_a = jnp.asarray(rng.integers(0, spec.max_a + 1, (m, k)), jnp.int32)
+    q_w = jnp.asarray(rng.integers(0, spec.max_w + 1, (k, n)), jnp.int32)
+    ap = packing.pack_activations(q_a, spec, axis=-1)
+    if weight_store == "dense":
+        wp = ops.dense_store_weights(q_w, spec.w_bits)
+    else:
+        wp = packing.pack_weights(q_w, spec, axis=0)
+
+    cands = matmul_candidates(m, kp, n, spec, budget, limit=max_candidates)
+    heur_tiles = (heur.block_m, heur.block_n, heur.chunks)
+    if heur_tiles not in cands:
+        cands.append(heur_tiles)
+
+    best, heuristic_us = None, None
+    for bm, bn, ch in cands:
+        ws = plan_lib.matmul_working_set(bm, bn, ch, spec)
+        plan = dataclasses.replace(heur, block_m=bm, block_n=bn, chunks=ch,
+                                   vmem_bytes=ws, source="tuned")
+        us = measure_us(lambda: plan_lib.dispatch(plan, ap, wp),
+                        repeats=repeats)
+        if (bm, bn, ch) == heur_tiles:
+            heuristic_us = us
+        if best is None or us < best[0]:
+            best = (us, ws, bm, bn, ch)
+
+    us, ws, bm, bn, ch = best
+    entry = _entry((us, ws), heuristic_us, len(cands),
+                   block_m=bm, block_n=bn, chunks=ch)
+    _store(cache, key, entry)
+    return entry
+
+
+def tune_packed_conv2d(x_shape: tuple, w_shape: tuple, spec: PackSpec, *,
+                       padding: str = "SAME", backend: str = "auto",
+                       weight_store: str = "lanes",
+                       k_full: int | None = None,
+                       vmem_budget: int | None = None,
+                       cache: TuningCache | None = None,
+                       max_candidates: int = 12, repeats: int = 3,
+                       force: bool = False, seed: int = 0) -> dict:
+    """Benchmark the (block_h, block_co) grid for one conv2d signature."""
+    from repro.kernels import ops
+
+    backend = plan_lib.resolve_backend(backend)
+    cache = cache if cache is not None else active_cache()
+    nb, h, w, cp = x_shape
+    fh, fw, cdim, co = w_shape
+    if weight_store == "dense" and k_full is None:
+        k_full = cp * spec.n_pack
+    key = conv2d_key(tuple(x_shape), tuple(w_shape), spec, padding=padding,
+                     backend=backend, weight_store=weight_store)
+    if not force:
+        hit = cache.lookup(key)
+        if hit is not None:
+            return hit
+    budget = vmem_budget or int(hw.VMEM_PER_CORE * plan_lib.VMEM_FRACTION)
+    heur = plan_lib.plan_packed_conv2d(
+        tuple(x_shape), tuple(w_shape), spec, padding=padding,
+        backend=backend, weight_store=weight_store, k_full=k_full,
+        vmem_budget=vmem_budget, use_tuning_cache=False)
+
+    rng = np.random.default_rng(seed)
+    cin = k_full if k_full is not None else cp * spec.n_pack
+    q_x = jnp.asarray(rng.integers(0, spec.max_a + 1, (nb, h, w, cin)),
+                      jnp.int32)
+    q_w = jnp.asarray(rng.integers(0, spec.max_w + 1, (fh, fw, cin, co)),
+                      jnp.int32)
+    xp = packing.pack_activations(q_x, spec, axis=-1)
+    if weight_store == "dense":
+        wp = ops.dense_store_conv_weights(q_w, spec.w_bits)
+    else:
+        wp = packing.pack_weights(q_w, spec, axis=2)
+
+    ph, pw = (h + fh - 1, w + fw - 1) if padding == "SAME" else (h, w)
+    out_h, out_w = ph - fh + 1, pw - fw + 1
+
+    def ws_fn(bh, bco):
+        return plan_lib.conv2d_working_set(
+            bh, bco, fh=fh, fw=fw, w=pw, cp=cp, cdim=cdim, out_w=out_w,
+            spec=spec, weight_store=weight_store)
+
+    cands = conv2d_candidates(out_h, co, ws_fn, budget,
+                              limit=max_candidates)
+    heur_tiles = (heur.block_h, heur.block_co)
+    if heur_tiles not in cands:
+        cands.append(heur_tiles)
+
+    best, heuristic_us = None, None
+    for bh, bco in cands:
+        ws = ws_fn(bh, bco)
+        plan = dataclasses.replace(heur, block_h=bh, block_co=bco,
+                                   vmem_bytes=ws, source="tuned")
+        us = measure_us(lambda: plan_lib.dispatch(plan, xp, wp, padding),
+                        repeats=repeats)
+        if (bh, bco) == heur_tiles:
+            heuristic_us = us
+        if best is None or us < best[0]:
+            best = (us, ws, bh, bco)
+
+    us, ws, bh, bco = best
+    entry = _entry((us, ws), heuristic_us, len(cands),
+                   block_h=bh, block_co=bco)
+    _store(cache, key, entry)
+    return entry
+
+
+def tune_attention_chunk(b: int, sq: int, skv: int, h: int, kvh: int,
+                         hd: int, *, kv_bits: int = 0,
+                         cache: TuningCache | None = None,
+                         repeats: int = 3, force: bool = False,
+                         seed: int = 0) -> dict:
+    """Benchmark the q-chunk of the fused-dequant attention loop for one
+    (batch, q-len, kv-len, heads, head-dim, kv_bits) signature."""
+    from repro.models import attention as attn
+
+    cache = cache if cache is not None else active_cache()
+    key = attention_key(b, sq, skv, h, kvh, hd, kv_bits)
+    if not force:
+        hit = cache.lookup(key)
+        if hit is not None:
+            return hit
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(b, sq, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, skv, kvh, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, skv, kvh, hd)), jnp.float32)
+    if kv_bits in (8, 4, 2):
+        qk, sk = attn._kv_quantize(k, kv_bits)
+        qv, sv = attn._kv_quantize(v, kv_bits)
+
+        def kv_fn():
+            return (attn._kv_dequantize(qk, sk, jnp.float32, kv_bits, hd),
+                    attn._kv_dequantize(qv, sv, jnp.float32, kv_bits, hd))
+    else:
+        def kv_fn():
+            return k, v
+    kv_pos = jnp.arange(skv)
+    q_pos = jnp.broadcast_to(jnp.arange(sq)[None, :], (b, sq))
+
+    def mask_fn(qpos):
+        return kv_pos[None, None, :] <= qpos[:, :, None]
+
+    best, heuristic_us = None, None
+    cands = [c for c in ATTN_CHUNKS if c <= max(sq, ATTN_CHUNKS[0])]
+    default = 512
+    if default not in cands:
+        cands.append(default)
+    for chunk in cands:
+        fn = jax.jit(lambda q, c=chunk: attn._chunked_attention(
+            q, kv_fn, mask_fn, q_pos, c))
+        us = measure_us(fn, q, repeats=repeats)
+        if chunk == default:
+            heuristic_us = us
+        if best is None or us < best[0]:
+            best = (us, chunk)
+    us, chunk = best
+    entry = {"q_chunk": int(chunk), "wall_us": round(us, 2),
+             "heuristic_us": round(heuristic_us, 2),
+             "candidates": len(cands)}
+    _store(cache, key, entry)
+    return entry
+
+
+@functools.lru_cache(maxsize=None)
+def attention_chunk_for(b: int, sq: int, skv: int, h: int, kvh: int,
+                        hd: int, kv_bits: int = 0,
+                        default: int = 512) -> int:
+    """Tuned q-chunk for a fused-attention signature (``default`` on miss).
+    Consulted at trace time by models/attention.attention_apply."""
+    entry = lookup(attention_key(b, sq, skv, h, kvh, hd, kv_bits))
+    if entry and isinstance(entry.get("q_chunk"), int):
+        return entry["q_chunk"]
+    return default

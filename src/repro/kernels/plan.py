@@ -82,6 +82,7 @@ class KernelPlan:
     block_h: int | None = None
     block_co: int | None = None
     vmem_bytes: int = 0               # planner working-set estimate
+    source: str = "heuristic"         # 'heuristic' | 'tuned' | 'manual'
 
     def __post_init__(self):
         if self.backend not in ("pallas", "xla"):
@@ -90,6 +91,8 @@ class KernelPlan:
             raise ValueError(f"unknown weight_store {self.weight_store!r}")
         if self.weight_store == "dense" and self.k_full is None:
             raise ValueError("dense weight storage requires k_full")
+        if self.source not in ("heuristic", "tuned", "manual"):
+            raise ValueError(f"unknown plan source {self.source!r}")
 
     @property
     def vmem_fraction(self) -> float:
@@ -100,6 +103,7 @@ class KernelPlan:
         d = {"op": self.op, "backend": self.backend,
              "spec": str(self.spec) if self.spec else "",
              "weight_store": self.weight_store,
+             "source": self.source,
              "vmem_bytes": self.vmem_bytes,
              "vmem_frac": round(self.vmem_fraction, 4)}
         for f in ("block_m", "block_n", "block_k", "chunks", "block_h",
@@ -115,8 +119,9 @@ class KernelPlan:
                                    "block_h", "block_co")
                          if getattr(self, f) is not None)
         spec = f" {self.spec}" if self.spec else ""
+        src = "" if self.source == "heuristic" else f" {self.source}"
         return (f"Plan[{self.op}/{self.backend}{spec} "
-                f"store={self.weight_store} {tiles}]")
+                f"store={self.weight_store} {tiles}{src}]")
 
 
 # ---------------------------------------------------------------------------
@@ -169,28 +174,88 @@ def _lane_bytes(spec: PackSpec) -> int:
     return jnp.dtype(spec.lane_dtype).itemsize
 
 
+def matmul_working_set(bm: int, bn: int, chunks: int,
+                       spec: PackSpec) -> int:
+    """ulppack_matmul VMEM accounting: (bm*bk + bk*bn) lanes +
+    (chunks+1)*bm*bn s32 accumulator/output tiles."""
+    bk = chunks * spec.k_tile
+    return (bm * bk + bk * bn) * _lane_bytes(spec) + \
+        (chunks + 1) * bm * bn * 4
+
+
+def conv2d_working_set(block_h: int, block_co: int, *, fh: int, fw: int,
+                       w: int, cp: int, cdim: int, out_w: int,
+                       spec: PackSpec, weight_store: str) -> int:
+    """ulppack_conv2d VMEM accounting: halo-overlapped input tile + weight
+    block + s32 accumulator/output tiles (``w`` is the padded input
+    width)."""
+    lb = _lane_bytes(spec)
+    w_bytes = fh * fw * cdim * block_co * \
+        (4 if weight_store == "dense" else lb)
+    x_tile = (block_h + fh - 1) * w * cp * lb
+    acc_out = 2 * block_h * out_w * block_co * 4
+    return x_tile + w_bytes + acc_out
+
+
+def _tuned_entry(key: str, budget: int, ws_ok) -> dict | None:
+    """Consult the active autotune cache; entries whose tiles no longer fit
+    the VMEM budget (stale cache, changed budget) are ignored.  ``ws_ok``
+    maps an entry to its working-set estimate or None when malformed."""
+    from repro.kernels import autotune  # deferred: autotune imports plan
+
+    entry = autotune.lookup(key)
+    if entry is None:
+        return None
+    try:
+        ws = ws_ok(entry)
+    except (KeyError, TypeError, ValueError):
+        return None
+    if ws is None or ws > budget:
+        return None
+    return entry
+
+
 @functools.lru_cache(maxsize=None)
 def plan_packed_matmul(m: int, kp: int, n: int, spec: PackSpec, *,
                        backend: str = "auto", weight_store: str = "lanes",
                        k_full: int | None = None,
-                       vmem_budget: int | None = None) -> KernelPlan:
+                       vmem_budget: int | None = None,
+                       use_tuning_cache: bool = True) -> KernelPlan:
     """Plan a packed-lane matmul [m, kp] x [kp, n].
 
-    Tile choice mirrors ulppack_matmul's VMEM accounting: working set
-    ~= (bm*bk + bk*bn) lanes + (chunks+1)*bm*bn s32.  Defaults (128, 128,
-    chunks=8) are kept when they fit; otherwise chunks shrinks first (it only
-    amortizes grid overhead), then bn, then bm.
+    The autotune cache (kernels/autotune.py) is consulted first: a hit whose
+    tiles still fit the VMEM budget becomes the plan (``source='tuned'``).
+    On miss, tile choice mirrors ulppack_matmul's VMEM accounting: working
+    set ~= (bm*bk + bk*bn) lanes + (chunks+1)*bm*bn s32.  Defaults (128,
+    128, chunks=8) are kept when they fit; otherwise chunks shrinks first
+    (it only amortizes grid overhead), then bn, then bm.
     """
     backend = resolve_backend(backend)
     if weight_store == "dense" and k_full is None:
         k_full = kp * spec.n_pack
     budget = vmem_budget or int(hw.VMEM_PER_CORE * VMEM_FRACTION)
-    lb = _lane_bytes(spec)
-    kt = spec.k_tile
+
+    if use_tuning_cache:
+        from repro.kernels import autotune
+        entry = _tuned_entry(
+            autotune.matmul_key(m, kp, n, spec, backend=backend,
+                                weight_store=weight_store),
+            budget,
+            lambda e: matmul_working_set(int(e["block_m"]),
+                                         int(e["block_n"]),
+                                         int(e["chunks"]), spec))
+        if entry is not None:
+            bm, bn, chunks = (int(entry["block_m"]), int(entry["block_n"]),
+                              int(entry["chunks"]))
+            return KernelPlan(
+                op="packed_matmul", backend=backend, spec=spec,
+                interpret=default_interpret(), weight_store=weight_store,
+                k_full=k_full, block_m=bm, block_n=bn, chunks=chunks,
+                vmem_bytes=matmul_working_set(bm, bn, chunks, spec),
+                source="tuned")
 
     def working_set(bm, bn, chunks):
-        bk = chunks * kt
-        return (bm * bk + bk * bn) * lb + (chunks + 1) * bm * bn * 4
+        return matmul_working_set(bm, bn, chunks, spec)
 
     bm, bn, chunks = 128, 128, 8
     while chunks > 1 and working_set(bm, bn, chunks) > budget:
@@ -211,13 +276,17 @@ def plan_packed_conv2d(x_shape: tuple, w_shape: tuple, spec: PackSpec, *,
                        padding: str = "SAME", backend: str = "auto",
                        weight_store: str = "lanes", k_full: int | None = None,
                        block_h: int | None = None, block_co: int | None = None,
-                       vmem_budget: int | None = None) -> KernelPlan:
+                       vmem_budget: int | None = None,
+                       use_tuning_cache: bool = True) -> KernelPlan:
     """Plan a packed conv2d: x [N, H, W, Cp] * w [Fh, Fw, Cdim, Co].
 
-    Picks the largest ``block_h`` whose spatially-tiled working set —
-    halo-overlapped input tile, weight block, s32 accumulator + output tile —
-    fits the VMEM budget, so VMEM use is bounded by the tile rather than the
-    image and large resolutions stay feasible (DESIGN.md §10).
+    The autotune cache is consulted first (unless the caller pins tiles with
+    ``block_h``/``block_co``): a hit whose tiles fit the VMEM budget becomes
+    the plan (``source='tuned'``).  The heuristic fallback picks the largest
+    ``block_h`` whose spatially-tiled working set — halo-overlapped input
+    tile, weight block, s32 accumulator + output tile — fits the VMEM
+    budget, so VMEM use is bounded by the tile rather than the image and
+    large resolutions stay feasible (DESIGN.md §10).
     """
     backend = resolve_backend(backend)
     _, h, w, cp = x_shape
@@ -228,14 +297,33 @@ def plan_packed_conv2d(x_shape: tuple, w_shape: tuple, spec: PackSpec, *,
         h, w = h + fh - 1, w + fw - 1
     out_h, out_w = h - fh + 1, w - fw + 1
     budget = vmem_budget or int(hw.VMEM_PER_CORE * VMEM_FRACTION)
-    lb = _lane_bytes(spec)
+
+    def working_set_at(bh, bco):
+        return conv2d_working_set(bh, bco, fh=fh, fw=fw, w=w, cp=cp,
+                                  cdim=cdim, out_w=out_w, spec=spec,
+                                  weight_store=weight_store)
+
+    if use_tuning_cache and block_h is None and block_co is None:
+        from repro.kernels import autotune
+        entry = _tuned_entry(
+            autotune.conv2d_key(tuple(x_shape), tuple(w_shape), spec,
+                                padding=padding, backend=backend,
+                                weight_store=weight_store),
+            budget,
+            lambda e: working_set_at(int(e["block_h"]), int(e["block_co"])))
+        if entry is not None:
+            bh = min(int(entry["block_h"]), out_h)
+            bco = min(int(entry["block_co"]), co)
+            return KernelPlan(
+                op="packed_conv2d", backend=backend, spec=spec,
+                interpret=default_interpret(), weight_store=weight_store,
+                k_full=k_full, block_h=bh, block_co=bco,
+                vmem_bytes=working_set_at(bh, bco), source="tuned")
+
     bco = block_co or min(8, co)
-    w_bytes = fh * fw * cdim * bco * (4 if weight_store == "dense" else lb)
 
     def working_set(bh):
-        x_tile = (bh + fh - 1) * w * cp * lb
-        acc_out = 2 * bh * out_w * bco * 4
-        return x_tile + w_bytes + acc_out
+        return working_set_at(bh, bco)
 
     if block_h is None:
         if working_set(out_h) <= budget:

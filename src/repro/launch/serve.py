@@ -35,6 +35,11 @@ def main():
                     help="0 = greedy")
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--no-packed", action="store_true")
+    ap.add_argument("--autotune", action="store_true",
+                    help="warm-tune the serving kernel signatures missing "
+                         "from the autotune cache before planning, then "
+                         "persist the cache (tune once offline; plans come "
+                         "back cache-backed on later launches)")
     ap.add_argument("--kv-bits", type=int, default=-1,
                     choices=(-1, 0, 16, 8, 4, 2),
                     help="KV cache storage precision override: 0/16 = bf16, "
@@ -56,7 +61,12 @@ def main():
         max_queue=args.max_queue or None,
         sampling=SamplingParams(temperature=args.temperature,
                                 top_k=args.top_k),
-        hbm_cache_budget=int(args.hbm_cache_budget_mb * 2**20) or None)
+        hbm_cache_budget=int(args.hbm_cache_budget_mb * 2**20) or None,
+        autotune=args.autotune)
+    if args.autotune:
+        from repro.kernels import autotune as autotune_lib
+        print(f"autotune cache saved to "
+              f"{autotune_lib.active_cache().save()}")
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         eng.submit(Request(

@@ -181,8 +181,13 @@ def precompute_cross_kv(p, cfg, enc_out, *, quant_mode="none"):
 def attention_apply(p, cfg, x, *, positions, quant_mode="none",
                     cache=None, cache_index=None, cache_valid=None,
                     kv_x=None, kv_positions=None, causal=True,
-                    positions3=None, q_chunk=512, cross_kv=None):
+                    positions3=None, q_chunk=None, cross_kv=None):
     """Full attention forward.
+
+    ``q_chunk=None`` consults the autotune cache for the fused-attention
+    chunk tuned for this (batch, q-len, kv-len, heads, head-dim, kv_bits)
+    signature (kernels/autotune.py), falling back to 512; pass an int to
+    pin it.
 
     Modes:
       * training/prefill: cache=None (or cache provided to be FILLED when
@@ -308,6 +313,13 @@ def attention_apply(p, cfg, x, *, positions, quant_mode="none",
 
     if positions.ndim == 1:
         positions = jnp.broadcast_to(positions[None, :], (b, sq))
+    if q_chunk is None:
+        from repro.kernels import autotune  # trace-time lookup, static ints
+        skv = (cache["k"].shape[1] if cache is not None
+               and cache_index is not None else k.shape[1])
+        q_chunk = autotune.attention_chunk_for(
+            b, sq, int(skv), cfg.num_heads, cfg.num_kv_heads, hd,
+            int(kv_bits))
     out = _chunked_attention(q, kv_fn, mask_fn, positions, q_chunk)
     out = dense_apply(p["o"], out.reshape(b, sq, cfg.num_heads * hd), **qm)
     return out, new_cache

@@ -75,12 +75,18 @@ def prepare_packed_params(params, cfg, *, weight_store: str = "lanes"):
 
 
 def layer_plans(params, cfg, x_shape, *, padding: str = "SAME",
-                backend: str = "auto"):
+                backend: str = "auto", autotune: bool = False):
     """Per-conv-layer KernelPlans for an input [N, H, W, 3] shape.
 
     SAME padding keeps H, W constant through the stack, so each layer's plan
     differs only in channel counts.  Returns a list aligned with
     params['layers'].
+
+    ``autotune=True`` is the opt-in warm-tune pass (DESIGN.md §14): each
+    layer signature missing from the active tuning cache is benchmarked
+    once (kernels/autotune.tune_packed_conv2d) before planning, so the
+    returned plans are cache-backed; the caller persists the cache
+    (``autotune.active_cache().save()``) to tune a deployment once offline.
     """
     n, h, w, _ = x_shape
     spec = PackSpec.from_config(cfg.quant)
@@ -102,6 +108,11 @@ def layer_plans(params, cfg, x_shape, *, padding: str = "SAME",
             cp = -(-w_shape[2] // spec.n_pack)
             w_shape = w_shape[:2] + (cp,) + w_shape[3:]
             store, k_full = "lanes", None
+        if autotune:
+            from repro.kernels import autotune as autotune_lib
+            autotune_lib.tune_packed_conv2d(
+                (n, h, w, cp), w_shape, spec, padding=padding,
+                backend=backend, weight_store=store, k_full=k_full)
         plans.append(plan_lib.plan_packed_conv2d(
             (n, h, w, cp), w_shape, spec, padding=padding, backend=backend,
             weight_store=store, k_full=k_full))

@@ -115,7 +115,8 @@ class ServingEngine:
                  dense_store: bool = False, prefill_chunk: int = 16,
                  max_queue: int | None = None,
                  sampling: SamplingParams | None = None,
-                 hbm_cache_budget: int | None = None):
+                 hbm_cache_budget: int | None = None,
+                 autotune: bool = False):
         self.cfg = cfg
         # Slot capacity is cache-bytes-aware: with an explicit HBM cache
         # budget the engine admits budget // bytes-per-slot concurrent
@@ -148,9 +149,12 @@ class ServingEngine:
         # Kernel plans are fixed at engine init (paper §IV: one execution
         # plan per layer, chosen offline) for both jitted row counts —
         # decode (max_batch rows) and chunked prefill (max_batch * chunk).
+        # ``autotune=True`` warm-tunes missing signatures first (the
+        # tune-once-offline deployment pass, DESIGN.md §14).
         self.plans = build_layer_plans(
             self.params, cfg, batch_rows=max_batch,
-            prefill_rows=max_batch * self.prefill_chunk) if packed else {}
+            prefill_rows=max_batch * self.prefill_chunk,
+            autotune=autotune) if packed else {}
         self._decode = jax.jit(steps_lib.make_decode_step(cfg))
         self._prefill = jax.jit(steps_lib.make_prefill_chunk_step(cfg))
         self._queue: deque[Request] = deque()

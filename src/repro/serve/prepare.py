@@ -55,7 +55,7 @@ def prepare_serving_params(params, cfg, *, dense_store: bool = False):
 
 def build_layer_plans(params, cfg, *, batch_rows: int = 1,
                       prefill_rows: int | None = None,
-                      backend: str = "auto"):
+                      backend: str = "auto", autotune: bool = False):
     """One KernelPlan per packed Dense leaf, keyed by its tree path.
 
     ``batch_rows`` is the decode-time row count (engine batch);
@@ -63,11 +63,28 @@ def build_layer_plans(params, cfg, *, batch_rows: int = 1,
     chunked-prefill shapes under a ``...@prefill`` key.  Plans are
     memoized, so both jitted serving steps hit exactly these objects when
     they dispatch.  Returns {'path/to/leaf': KernelPlan}.
+
+    ``autotune=True`` is the opt-in warm-tune pass (DESIGN.md §14): every
+    (rows, kp, n) signature missing from the active tuning cache is
+    benchmarked once before planning, so a deployment tunes once offline
+    and the plans come back cache-backed; the caller persists the cache
+    via ``autotune.active_cache().save()``.
     """
     if not cfg.quant.enabled:
         return {}
     spec = PackSpec.from_config(cfg.quant)
     plans = {}
+
+    def plan_rows(rows, kp, n, dense, k_full):
+        store = "dense" if dense else "lanes"
+        if autotune:
+            from repro.kernels import autotune as autotune_lib
+            autotune_lib.tune_packed_matmul(
+                rows, kp, n, spec, backend=backend, weight_store=store,
+                k_full=k_full)
+        return plan_lib.plan_packed_matmul(
+            rows, kp, n, spec, backend=backend, weight_store=store,
+            k_full=k_full)
 
     def walk(node, path):
         if _is_packed(node):
@@ -80,14 +97,10 @@ def build_layer_plans(params, cfg, *, batch_rows: int = 1,
                 kp = -(-k_full // spec.n_pack)
             else:
                 k_full, kp = None, w.shape[0]
-            plans[path] = plan_lib.plan_packed_matmul(
-                batch_rows, kp, n, spec, backend=backend,
-                weight_store="dense" if dense else "lanes", k_full=k_full)
+            plans[path] = plan_rows(batch_rows, kp, n, dense, k_full)
             if prefill_rows and prefill_rows != batch_rows:
-                plans[f"{path}@prefill"] = plan_lib.plan_packed_matmul(
-                    prefill_rows, kp, n, spec, backend=backend,
-                    weight_store="dense" if dense else "lanes",
-                    k_full=k_full)
+                plans[f"{path}@prefill"] = plan_rows(prefill_rows, kp, n,
+                                                     dense, k_full)
             return
         if isinstance(node, dict):
             for k, v in node.items():

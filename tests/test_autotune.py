@@ -1,0 +1,243 @@
+"""KernelPlan autotuner: cache load/fallback, planner consultation,
+determinism, and the committed CPU tuning cache (DESIGN.md §14)."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.packing import PackSpec
+from repro.kernels import autotune, ops, ref
+from repro.kernels import plan as plan_lib
+
+SPEC = PackSpec(2, 2, jnp.int16.dtype)
+
+
+@pytest.fixture(autouse=True)
+def _restore_active_cache():
+    """Every test starts from the lazy default and leaves no cache behind."""
+    autotune.reset_active_cache()
+    yield
+    autotune.reset_active_cache()
+
+
+def _empty():
+    return autotune.set_active_cache(autotune.TuningCache(device="cpu"))
+
+
+class TestCacheFile:
+    def test_save_load_roundtrip(self, tmp_path):
+        c = autotune.TuningCache(device="cpu")
+        key = autotune.matmul_key(8, 32, 64, SPEC, backend="xla")
+        c.store(key, {"block_m": 32, "block_n": 64, "chunks": 2})
+        path = c.save(str(tmp_path / "cache.json"))
+        back = autotune.TuningCache.load(path)
+        assert back is not None
+        assert back.device == "cpu"
+        assert back.lookup(key)["block_m"] == 32
+
+    def test_missing_file_is_silent_none(self, tmp_path):
+        assert autotune.TuningCache.load(str(tmp_path / "nope.json")) is None
+
+    def test_corrupt_file_warns_and_falls_back(self, tmp_path):
+        p = tmp_path / "bad.json"
+        p.write_text("{not json")
+        with pytest.warns(UserWarning, match="corrupt"):
+            assert autotune.TuningCache.load(str(p)) is None
+        # and the planners still work through load_cache on the bad file
+        with pytest.warns(UserWarning, match="corrupt"):
+            autotune.load_cache(str(p))
+        plan = plan_lib.plan_packed_matmul(8, 32, 64, SPEC, backend="xla")
+        assert plan.source == "heuristic"
+
+    def test_stale_schema_warns_and_falls_back(self, tmp_path):
+        p = tmp_path / "old.json"
+        p.write_text(json.dumps({"schema": autotune.SCHEMA_VERSION + 1,
+                                 "device": "cpu", "entries": {}}))
+        with pytest.warns(UserWarning, match="schema"):
+            assert autotune.TuningCache.load(str(p)) is None
+
+    def test_entries_must_be_a_dict(self, tmp_path):
+        p = tmp_path / "flat.json"
+        p.write_text(json.dumps({"schema": autotune.SCHEMA_VERSION,
+                                 "device": "cpu", "entries": [1, 2]}))
+        with pytest.warns(UserWarning, match="entries"):
+            assert autotune.TuningCache.load(str(p)) is None
+
+
+class TestPlannerConsultation:
+    def test_hit_returns_cache_backed_plan(self):
+        c = _empty()
+        c.store(autotune.matmul_key(8, 32, 64, SPEC, backend="xla"),
+                {"block_m": 32, "block_n": 64, "chunks": 2})
+        plan = plan_lib.plan_packed_matmul(8, 32, 64, SPEC, backend="xla")
+        assert plan.source == "tuned"
+        assert (plan.block_m, plan.block_n, plan.chunks) == (32, 64, 2)
+        # vmem estimate recomputed from the planner's own accounting
+        assert plan.vmem_bytes == plan_lib.matmul_working_set(32, 64, 2,
+                                                              SPEC)
+
+    def test_miss_falls_back_to_heuristic(self):
+        _empty()
+        plan = plan_lib.plan_packed_matmul(8, 32, 64, SPEC, backend="xla")
+        assert plan.source == "heuristic"
+        assert plan.block_m == 128
+
+    def test_use_tuning_cache_false_bypasses_hit(self):
+        c = _empty()
+        c.store(autotune.matmul_key(8, 32, 64, SPEC, backend="xla"),
+                {"block_m": 32, "block_n": 64, "chunks": 2})
+        plan = plan_lib.plan_packed_matmul(8, 32, 64, SPEC, backend="xla",
+                                           use_tuning_cache=False)
+        assert plan.source == "heuristic"
+
+    def test_over_budget_entry_ignored(self):
+        c = _empty()
+        c.store(autotune.matmul_key(8, 32, 64, SPEC, backend="xla"),
+                {"block_m": 4096, "block_n": 4096, "chunks": 16})
+        plan = plan_lib.plan_packed_matmul(8, 32, 64, SPEC, backend="xla")
+        assert plan.source == "heuristic"
+
+    def test_malformed_entry_ignored(self):
+        c = _empty()
+        c.store(autotune.matmul_key(8, 32, 64, SPEC, backend="xla"),
+                {"block_m": "huge"})
+        plan = plan_lib.plan_packed_matmul(8, 32, 64, SPEC, backend="xla")
+        assert plan.source == "heuristic"
+
+    def test_conv_hit_and_pinned_tiles_bypass(self):
+        c = _empty()
+        x_shape, w_shape = (1, 32, 32, 8), (3, 3, 8, 16)
+        c.store(autotune.conv2d_key(x_shape, w_shape, SPEC,
+                                    padding="VALID", backend="xla"),
+                {"block_h": 4, "block_co": 16})
+        plan = plan_lib.plan_packed_conv2d(x_shape, w_shape, SPEC,
+                                           padding="VALID", backend="xla")
+        assert plan.source == "tuned"
+        assert (plan.block_h, plan.block_co) == (4, 16)
+        pinned = plan_lib.plan_packed_conv2d(x_shape, w_shape, SPEC,
+                                             padding="VALID", backend="xla",
+                                             block_h=8)
+        assert pinned.source == "heuristic" and pinned.block_h == 8
+
+    def test_plan_selection_deterministic_given_fixed_cache(self):
+        c = _empty()
+        c.store(autotune.matmul_key(8, 32, 64, SPEC, backend="xla"),
+                {"block_m": 16, "block_n": 32, "chunks": 4})
+        a = plan_lib.plan_packed_matmul(8, 32, 64, SPEC, backend="xla")
+        plan_lib.clear_plan_cache()
+        b = plan_lib.plan_packed_matmul(8, 32, 64, SPEC, backend="xla")
+        assert a == b  # same frozen plan after a cold planner cache
+
+    def test_attention_chunk_lookup(self):
+        c = _empty()
+        c.store(autotune.attention_key(2, 64, 64, 4, 2, 16, 0),
+                {"q_chunk": 32})
+        assert autotune.attention_chunk_for(2, 64, 64, 4, 2, 16, 0) == 32
+        assert autotune.attention_chunk_for(1, 1, 1, 1, 1, 1, 0) == 512
+
+
+class TestTuners:
+    def test_tune_matmul_stores_winner_and_plan_adopts_it(self):
+        cache = _empty()
+        entry = autotune.tune_packed_matmul(4, 8, 16, SPEC, backend="xla",
+                                            repeats=1, max_candidates=3)
+        for k in ("block_m", "block_n", "chunks", "wall_us",
+                  "heuristic_us", "vmem_bytes", "candidates"):
+            assert k in entry, k
+        key = autotune.matmul_key(4, 8, 16, SPEC, backend="xla")
+        assert cache.lookup(key) is entry
+        plan = plan_lib.plan_packed_matmul(4, 8, 16, SPEC, backend="xla")
+        assert plan.source == "tuned"
+        assert plan.block_m == entry["block_m"]
+        # re-tune is a cache hit, not a re-measure
+        again = autotune.tune_packed_matmul(4, 8, 16, SPEC, backend="xla")
+        assert again is entry
+
+    def test_tuned_plan_stays_bit_exact(self):
+        _empty()
+        rng = np.random.default_rng(0)
+        q_a = jnp.asarray(rng.integers(0, 4, (5, 40)), jnp.int32)
+        q_w = jnp.asarray(rng.integers(0, 4, (40, 16)), jnp.int32)
+        from repro.core import packing
+        ap = packing.pack_activations(q_a, SPEC, -1)
+        wp = packing.pack_weights(q_w, SPEC, 0)
+        autotune.tune_packed_matmul(5, ap.shape[-1], 16, SPEC,
+                                    backend="pallas", repeats=1,
+                                    max_candidates=3)
+        plan = plan_lib.plan_packed_matmul(5, ap.shape[-1], 16, SPEC,
+                                           backend="pallas")
+        assert plan.source == "tuned"
+        got = ops.packed_matmul(ap, wp, SPEC, plan=plan)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(ref.matmul_i32_ref(q_a,
+                                                                    q_w)))
+
+    def test_tune_conv2d_stores_winner(self):
+        cache = _empty()
+        entry = autotune.tune_packed_conv2d(
+            (1, 12, 12, 4), (3, 3, 4, 8), SPEC, padding="VALID",
+            backend="xla", repeats=1, max_candidates=3)
+        assert "block_h" in entry and "block_co" in entry
+        key = autotune.conv2d_key((1, 12, 12, 4), (3, 3, 4, 8), SPEC,
+                                  padding="VALID", backend="xla")
+        assert cache.lookup(key) is entry
+
+    def test_store_into_active_cache_invalidates_memoized_plans(self):
+        _empty()
+        before = plan_lib.plan_packed_matmul(4, 8, 16, SPEC, backend="xla")
+        assert before.source == "heuristic"
+        autotune.tune_packed_matmul(4, 8, 16, SPEC, backend="xla",
+                                    repeats=1, max_candidates=2)
+        after = plan_lib.plan_packed_matmul(4, 8, 16, SPEC, backend="xla")
+        assert after.source == "tuned"
+
+
+class TestMeasure:
+    def test_median_of_repeats_scales_batch_to_min_time(self):
+        calls = []
+
+        def fn():
+            calls.append(1)
+            return jnp.zeros(())
+
+        us = autotune.measure_us(fn, repeats=3, min_time_s=0.001, iters=1)
+        assert us > 0
+        # warmup + calibration doubling + repeat batches all landed
+        assert len(calls) >= 4
+
+    def test_zero_min_time_keeps_fixed_iters(self):
+        calls = []
+
+        def fn():
+            calls.append(1)
+            return jnp.zeros(())
+
+        autotune.measure_us(fn, repeats=2, min_time_s=0.0, iters=3,
+                            warmup=1)
+        assert len(calls) == 1 + 3 + 3
+
+
+@pytest.mark.skipif(jax.default_backend() != "cpu",
+                    reason="committed tuning cache is CPU-scoped")
+class TestCommittedCache:
+    """Acceptance: with the committed CPU cache, the planners return
+    cache-backed plans for the benchmarked signatures."""
+
+    def test_committed_cache_loads(self):
+        path = autotune.default_cache_path("cpu")
+        cache = autotune.TuningCache.load(path)
+        assert cache is not None, path
+        assert cache.device == "cpu"
+        assert cache.entries
+
+    def test_planners_return_cache_backed_plans(self):
+        mm = plan_lib.plan_packed_matmul(8, 128, 256, SPEC,
+                                         backend="pallas")
+        assert mm.source == "tuned"
+        conv = plan_lib.plan_packed_conv2d(
+            (1, 64, 64, 16), (7, 7, 16, 32), SPEC, padding="VALID",
+            backend="pallas")
+        assert conv.source == "tuned"

@@ -1,0 +1,253 @@
+"""benchmarks/compare.py — the CI perf-regression gate — and the shared
+record schema / timing helpers in benchmarks/common.py."""
+
+import copy
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import common, compare  # noqa: E402
+
+BASE = {
+    "fig4": {"schema": 1, "rows": [
+        {"impl": "int16-conv2d", "wall_us": 100.0, "measured_speedup": 1.0},
+        {"impl": "ULP-vmacsr(W2A2)", "wall_us": 40.0,
+         "measured_speedup": 2.5},
+        {"case": "tuned-vs-heuristic/lanes", "heuristic_us": 64.0,
+         "tuned_us": 40.0, "tuned_speedup": 1.6},
+    ]},
+    "serve": {"schema": 1, "rows": {
+        "engine": [{"engine": "chunked-prefill-16", "prefill_tok_s": 900.0,
+                    "speedup_vs_baseline": 10.0}],
+        "kv_cache": [{"kv_bits": 4, "slots_vs_bf16": 4.0,
+                      "shrink_vs_bf16": 3.76,
+                      "cache_bytes_per_slot": 1024}],
+    }},
+}
+
+
+def _cur(mutate=None):
+    cur = copy.deepcopy(BASE)
+    if mutate:
+        mutate(cur)
+    return cur
+
+
+class TestCompare:
+    def test_identical_payloads_pass(self):
+        findings = compare.compare(BASE, _cur())
+        assert compare.gate_failures(findings) == []
+        assert all(f["status"] == "ok" for f in findings)
+
+    def test_halved_speedup_fails_gate(self):
+        def mutate(c):
+            c["fig4"]["rows"][2]["tuned_speedup"] = 0.8  # 2x slowdown
+
+        failures = compare.gate_failures(compare.compare(BASE, _cur(mutate)))
+        assert [f["metric"] for f in failures] == ["tuned_speedup"]
+        assert failures[0]["status"] == "regressed"
+
+    def test_regression_within_tolerance_passes(self):
+        def mutate(c):
+            c["fig4"]["rows"][2]["tuned_speedup"] = 1.4  # -12.5% < 25%
+
+        findings = compare.compare(BASE, _cur(mutate), tolerance=0.25)
+        assert compare.gate_failures(findings) == []
+
+    def test_near_unity_speedup_is_report_only(self):
+        """A baseline speedup inside NEAR_UNITY_BAND recorded no material
+        win; its collapse reports but cannot fail CI on runner noise."""
+        base = {"fig4": {"schema": 1, "rows": [
+            {"case": "tuned-vs-heuristic/dense", "tuned_speedup": 1.08}]}}
+        cur = copy.deepcopy(base)
+        cur["fig4"]["rows"][0]["tuned_speedup"] = 0.7
+        findings = compare.compare(base, cur)
+        assert compare.gate_failures(findings) == []
+        assert findings[0]["status"] == "regressed"  # still reported
+
+    def test_improvement_never_fails(self):
+        def mutate(c):
+            c["serve"]["rows"]["kv_cache"][0]["slots_vs_bf16"] = 8.0
+
+        findings = compare.compare(BASE, _cur(mutate))
+        assert compare.gate_failures(findings) == []
+        assert any(f["status"] == "improved" for f in findings)
+
+    def test_missing_gated_metric_fails(self):
+        def mutate(c):
+            del c["serve"]["rows"]["engine"][0]["speedup_vs_baseline"]
+
+        failures = compare.gate_failures(compare.compare(BASE, _cur(mutate)))
+        assert [(f["metric"], f["status"]) for f in failures] == \
+            [("speedup_vs_baseline", "missing")]
+
+    def test_missing_case_fails_its_gated_metrics(self):
+        def mutate(c):
+            c["fig4"]["rows"] = c["fig4"]["rows"][:2]
+
+        failures = compare.gate_failures(compare.compare(BASE, _cur(mutate)))
+        assert {f["metric"] for f in failures} == {"tuned_speedup"}
+
+    def test_absolute_metrics_report_only_by_default(self):
+        def mutate(c):
+            c["fig4"]["rows"][0]["wall_us"] = 1000.0      # 10x slower
+            c["serve"]["rows"]["engine"][0]["prefill_tok_s"] = 1.0
+
+        findings = compare.compare(BASE, _cur(mutate))
+        assert compare.gate_failures(findings) == []
+        regressed = {f["metric"] for f in findings
+                     if f["status"] == "regressed"}
+        assert {"wall_us", "prefill_tok_s"} <= regressed  # still reported
+
+    def test_gate_absolute_arms_wall_and_throughput(self):
+        def mutate(c):
+            c["fig4"]["rows"][0]["wall_us"] = 200.0       # injected 2x
+
+        findings = compare.compare(BASE, _cur(mutate), gate_absolute=True)
+        assert {f["metric"] for f in compare.gate_failures(findings)} == \
+            {"wall_us"}
+
+    def test_extra_gate_regex(self):
+        def mutate(c):
+            c["serve"]["rows"]["kv_cache"][0]["cache_bytes_per_slot"] = 9999
+
+        findings = compare.compare(BASE, _cur(mutate),
+                                   extra_gates=(r"cache_bytes_per_slot",))
+        assert compare.gate_failures(findings)
+
+    def test_schema_mismatch_rejected(self):
+        bad = _cur(lambda c: c["fig4"].__setitem__("schema", 99))
+        with pytest.raises(ValueError, match="schema"):
+            compare.compare(bad, _cur())
+
+    def test_non_numeric_values_skipped(self):
+        base = {"fig5": {"schema": 1, "rows": [
+            {"mode": "native", "w_bits": 4, "a_bits": 4,
+             "speedup_vs_int16": "overflow"}]}}
+        findings = compare.compare(base, copy.deepcopy(base))
+        assert findings == []
+
+
+class TestCompareCli:
+    def _write(self, tmp_path, name, payloads):
+        p = tmp_path / name
+        p.write_text(json.dumps({"schema": 1, "benches": payloads}))
+        return str(p)
+
+    def test_exit_zero_on_match_and_one_on_regression(self, tmp_path,
+                                                      capsys):
+        base = self._write(tmp_path, "base.json", BASE)
+        cur = self._write(tmp_path, "cur.json", _cur())
+        assert compare.main(["--baseline", base, "--current", cur]) == 0
+        assert "PASS" in capsys.readouterr().out
+        bad = self._write(tmp_path, "bad.json",
+                          _cur(lambda c: c["fig4"]["rows"][2].__setitem__(
+                              "tuned_speedup", 0.5)))
+        assert compare.main(["--baseline", base, "--current", bad]) == 1
+        out = capsys.readouterr()
+        assert "FAIL" in out.out and "tuned_speedup" in out.err
+
+    def test_summary_file_and_current_dir(self, tmp_path, capsys):
+        base = self._write(tmp_path, "base.json", BASE)
+        out_dir = tmp_path / "bench-out"
+        out_dir.mkdir()
+        for key, payload in _cur().items():
+            payload = dict(payload, bench=key)
+            (out_dir / f"BENCH_{key}.json").write_text(json.dumps(payload))
+        summary = tmp_path / "report.md"
+        rc = compare.main(["--baseline", base, "--current", str(out_dir),
+                           "--summary", str(summary)])
+        assert rc == 0
+        assert "Perf-regression gate" in summary.read_text()
+
+    def test_usage_error_exit_two(self, tmp_path, capsys):
+        rc = compare.main(["--baseline", str(tmp_path / "none.json"),
+                           "--current", str(tmp_path)])
+        assert rc == 2
+
+
+_BASELINE = os.path.join(os.path.dirname(__file__), "..", "reports",
+                         "BENCH_baseline.json")
+
+
+@pytest.mark.skipif(not os.path.exists(_BASELINE),
+                    reason="no committed gate baseline")
+class TestCommittedBaseline:
+    """Acceptance: zero exit on the committed baseline vs itself, non-zero
+    on an injected 2x slowdown."""
+
+    def test_self_compare_passes(self):
+        assert compare.main(["--baseline", _BASELINE,
+                             "--current", _BASELINE]) == 0
+
+    def test_injected_2x_slowdown_fails(self, tmp_path):
+        with open(_BASELINE) as f:
+            data = json.load(f)
+        injected = 0
+        for payload in data["benches"].values():
+            rows = payload.get("rows")
+            groups = rows.values() if isinstance(rows, dict) else [rows]
+            for rs in groups:
+                for r in rs or []:
+                    for k, v in list(r.items()):
+                        if not isinstance(v, (int, float)) or \
+                                isinstance(v, bool):
+                            continue
+                        if compare.is_gated(k) and \
+                                common.metric_direction(k) == "higher":
+                            r[k] = v / 2       # every tuned/ratio path 2x
+                            injected += 1
+        assert injected > 0, "baseline carries no gated metrics"
+        doctored = tmp_path / "slow.json"
+        doctored.write_text(json.dumps(data))
+        assert compare.main(["--baseline", _BASELINE,
+                             "--current", str(doctored)]) == 1
+
+    def test_doubled_wall_us_fails_with_gate_absolute(self, tmp_path):
+        with open(_BASELINE) as f:
+            data = json.load(f)
+        injected = 0
+        for payload in data["benches"].values():
+            rows = payload.get("rows")
+            groups = rows.values() if isinstance(rows, dict) else [rows]
+            for rs in groups:
+                for r in rs or []:
+                    if isinstance(r.get("wall_us"), (int, float)):
+                        r["wall_us"] = r["wall_us"] * 2
+                        injected += 1
+        assert injected > 0
+        doctored = tmp_path / "slow.json"
+        doctored.write_text(json.dumps(data))
+        assert compare.main(["--baseline", _BASELINE, "--current",
+                             str(doctored), "--gate-absolute"]) == 1
+
+
+class TestCommonHelpers:
+    def test_metric_direction(self):
+        assert common.metric_direction("wall_us") == "lower"
+        assert common.metric_direction("cache_bytes_per_slot") == "lower"
+        assert common.metric_direction("prefill_tok_s") == "higher"
+        assert common.metric_direction("tuned_speedup") == "higher"
+        assert common.metric_direction("slots_vs_bf16") == "higher"
+        assert common.metric_direction("plan") is None
+        assert common.metric_direction("w_bits") is None
+
+    def test_record_and_row_case(self):
+        r = common.record("tuned-vs-heuristic/lanes", tuned_speedup=1.2)
+        assert common.row_case(r) == "tuned-vs-heuristic/lanes"
+        assert common.row_case({"impl": "int16"}) == "impl=int16"
+        assert common.row_case({"mode": "native", "w_bits": 2,
+                                "a_bits": 2}) == \
+            "mode=native|w_bits=2|a_bits=2"
+        assert common.row_case({}, 7) == "row7"
+
+    def test_wall_us_median_of_repeats(self):
+        import jax.numpy as jnp
+
+        us = common.wall_us(lambda: jnp.zeros(()), iters=1, warmup=1,
+                            repeats=3, min_time_s=0.001)
+        assert us > 0
