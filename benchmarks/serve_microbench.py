@@ -14,6 +14,13 @@
   cache converts bit density into admission capacity (slots scale with the
   bytes shrink), the serving-side analogue of the paper's sub-byte storage
   thesis.
+* ``run_sharded`` — tensor-parallel packed engine (serve/shard.ShardPlan,
+  DESIGN.md §15) vs the single-device engine on the same requests.
+  Report-only (CPU-simulated meshes measure collective overhead, not TP
+  scaling; the metric names deliberately avoid the gated speedup/_vs_bf16
+  patterns) and degrades to a single row noting the device count when the
+  host has one device (force more with
+  XLA_FLAGS=--xla_force_host_platform_device_count=4).
 """
 
 from __future__ import annotations
@@ -231,10 +238,76 @@ def run_kv_cache(quick: bool = False):
     return rows
 
 
+def run_sharded(quick: bool = False):
+    """Sharded-vs-single-device packed engine throughput (report-only).
+
+    Both engines serve the same seeded requests through the packed path
+    (w2a2, kv_bits=4); the sharded one on a ('data'=1, 'model'=N) mesh
+    over every host device.  ``tokens_match`` records the tentpole
+    invariant (token-for-token identical output, tests/test_shard_serving
+    gates it); ``decode_tok_s_ratio_vs_single`` is informational.
+    """
+    from repro import configs
+    from repro.core.quant import QuantConfig
+    from repro.launch.mesh import make_serving_mesh
+    from repro.models import lm
+    from repro.serve.engine import Metrics, Request, ServingEngine
+
+    n_dev = len(jax.devices())
+    if n_dev < 2:
+        # no comparison possible — skip the engine build/compile entirely
+        # (run_engine already measures single-device throughput) and leave
+        # a note row so the BENCH json says why the comparison is absent
+        rows = [{"engine": "single-device", "devices": 1,
+                 "note": ("host has 1 device; force a mesh with XLA_FLAGS="
+                          "--xla_force_host_platform_device_count=4")}]
+        emit(rows, ["engine", "devices", "note"])
+        return rows
+    cfg = configs.get_config("stablelm-1.6b", reduced=True).replace(
+        param_dtype="float32", compute_dtype="float32",
+        quant=QuantConfig(enabled=True, w_bits=2, a_bits=2, kv_bits=4))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    n_req = 2 if quick else 4
+    prompt_len, new_tokens = 8, 4 if quick else 8
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32)
+               for _ in range(n_req)]
+
+    def bench(mesh):
+        eng = ServingEngine(cfg, params, max_batch=2, max_len=32,
+                            packed=True, prefill_chunk=8, mesh=mesh)
+        eng.submit(Request(uid=10_000, prompt=prompts[0],
+                           max_new_tokens=2))      # warmup: compile steps
+        eng.run_to_completion()
+        eng.metrics = Metrics()
+        for i, p in enumerate(prompts):
+            eng.submit(Request(uid=i, prompt=p, max_new_tokens=new_tokens))
+        outs = {r.uid: tuple(r.output) for r in eng.run_to_completion()}
+        return eng.metrics.report(), outs
+
+    single_rep, single_out = bench(None)
+    shard_rep, shard_out = bench(make_serving_mesh(n_dev))
+    rows = [{"engine": "single-device", "devices": 1,
+             "prefill_tok_s": single_rep["prefill_tok_s"],
+             "decode_tok_s": single_rep["decode_tok_s"],
+             "decode_tok_s_ratio_vs_single": 1.0, "tokens_match": True},
+            {"engine": f"model-parallel-{n_dev}", "devices": n_dev,
+             "prefill_tok_s": shard_rep["prefill_tok_s"],
+             "decode_tok_s": shard_rep["decode_tok_s"],
+             "decode_tok_s_ratio_vs_single": round(
+                 shard_rep["decode_tok_s"]
+                 / max(single_rep["decode_tok_s"], 1e-9), 3),
+             "tokens_match": shard_out == single_out}]
+    emit(rows, ["engine", "devices", "prefill_tok_s", "decode_tok_s",
+                "decode_tok_s_ratio_vs_single", "tokens_match"])
+    return rows
+
+
 def run(quick: bool = False):
     return {"linear": run_linear(quick),
             "engine": run_engine(quick),
-            "kv_cache": run_kv_cache(quick)}
+            "kv_cache": run_kv_cache(quick),
+            "sharded": run_sharded(quick)}
 
 
 if __name__ == "__main__":

@@ -5,8 +5,16 @@ stored sub-byte (kv_bits=4: bit-dense packed words + per-(pos, head) scales),
 so a fixed HBM cache budget admits ~4x the concurrent sequences of bf16.
 
 Run:  PYTHONPATH=src python examples/serve_quantized.py
+
+Tensor-parallel variant (mesh-native serving, DESIGN.md §15) on a
+CPU-simulated 4-device mesh — packed weights column-parallel, KV cache
+sharded over the kv-head axis, token-for-token identical output:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python examples/serve_quantized.py --model-parallel 4
 """
 
+import argparse
 import time
 
 import jax
@@ -20,11 +28,25 @@ from repro.serve.prepare import prepare_serving_params, serving_param_bytes
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model-parallel", type=int, default=1,
+                    help="tensor-parallel shards (needs that many devices; "
+                         "force CPU devices with XLA_FLAGS=--xla_force_"
+                         "host_platform_device_count=N)")
+    args = ap.parse_args()
+
     cfg = configs.get_config("stablelm-1.6b", reduced=True).replace(
         d_model=128, num_heads=8, num_kv_heads=8, d_ff=384, num_layers=4,
         vocab_size=2048, param_dtype="float32", compute_dtype="float32",
         quant=QuantConfig(enabled=True, w_bits=2, a_bits=2, kv_bits=4))
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
+
+    mesh = None
+    if args.model_parallel > 1:
+        from repro.launch.mesh import make_serving_mesh
+        mesh = make_serving_mesh(args.model_parallel)
+        print(f"serving mesh: {dict(mesh.shape)} over "
+              f"{len(jax.devices())} host devices")
 
     raw_bytes = serving_param_bytes(params)
     packed = prepare_serving_params(params, cfg)
@@ -33,8 +55,12 @@ def main():
           f"{packed_bytes/1e6:.1f} MB packed "
           f"({raw_bytes/packed_bytes:.1f}x smaller)")
 
-    eng = ServingEngine(cfg, params, max_batch=2, max_len=64, packed=True)
+    eng = ServingEngine(cfg, params, max_batch=2, max_len=64, packed=True,
+                        mesh=mesh)
     cap = eng.capacity_report()
+    if "shard_plan" in cap:
+        print(f"shard plan: {cap['shard_plan']} — packed weights "
+              f"column-parallel, kv cache head-sharded")
     bf16_slot = lm.cache_bytes(
         cfg.replace(quant=cfg.quant.replace(kv_bits=0)), 1, 64)
     print(f"kv cache: {cap['cache_bytes_per_slot']/1e3:.1f} KB/slot at "

@@ -6,6 +6,8 @@ jax device state (the dry-run must set XLA_FLAGS before first jax init).
 
 from __future__ import annotations
 
+import warnings
+
 import jax
 
 
@@ -17,8 +19,35 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
-    """Tiny mesh over the real host devices (tests / examples)."""
+    """Tiny mesh over the real host devices (tests / examples).
+
+    Infeasible ``(data, model)`` requests are clamped to what the host
+    actually has — loudly: sharding tests that silently ran on a 1x1 mesh
+    were passing without testing anything.
+    """
     n = len(jax.devices())
-    data = min(data, n)
-    model = min(model, max(1, n // data))
-    return jax.make_mesh((data, model), ("data", "model"))
+    data_actual = min(data, n)
+    model_actual = min(model, max(1, n // data_actual))
+    if (data_actual, model_actual) != (data, model):
+        warnings.warn(
+            f"make_host_mesh: requested (data={data}, model={model}) "
+            f"needs {data * model} devices but the host has {n}; "
+            f"clamping to (data={data_actual}, model={model_actual}). "
+            f"Force more CPU devices with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N.",
+            stacklevel=2)
+    return jax.make_mesh((data_actual, model_actual), ("data", "model"))
+
+
+def make_serving_mesh(model: int = 1):
+    """Serving mesh: ('data', 'model') with data pinned to 1.
+
+    The serving engine is tensor-parallel only (replicated small batch,
+    sharded packed weights + kv-head-sharded caches — serve/shard.py);
+    ``model`` is the ``--model-parallel`` CLI knob.  Requests beyond the
+    host's device count clamp with the same warning as make_host_mesh.
+    Testable on CPU via XLA_FLAGS=--xla_force_host_platform_device_count=4.
+    """
+    if model < 1:
+        raise ValueError(f"model parallelism must be >= 1, got {model}")
+    return make_host_mesh(data=1, model=model)

@@ -4,6 +4,13 @@ DESIGN.md §12).
 
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
         --reduced --requests 4 --prefill-chunk 16
+
+Tensor-parallel serving (serve/shard.ShardPlan, DESIGN.md §15) on a
+CPU-simulated mesh:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
+        python -m repro.launch.serve --arch stablelm-1.6b --reduced \
+        --model-parallel 4 --metrics
 """
 
 from __future__ import annotations
@@ -49,12 +56,28 @@ def main():
                     help="size batch slots from this HBM cache budget "
                          "(slots = budget // cache bytes per slot) instead "
                          "of --max-batch")
+    ap.add_argument("--model-parallel", type=int, default=1,
+                    help="tensor-parallel shards: serve over a ('data'=1, "
+                         "'model'=N) mesh — packed weights column-parallel, "
+                         "KV cache sharded on the kv-head axis (serve/"
+                         "shard.ShardPlan).  Testable on CPU via "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the full engine metrics report (throughput "
+                         "split by phase, occupancy, per-request TTFT and "
+                         "time-per-output-token mean/p50/p95) plus the "
+                         "capacity/shard report as JSON")
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch, reduced=args.reduced)
     if args.kv_bits >= 0:
         cfg = cfg.replace(quant=cfg.quant.replace(kv_bits=args.kv_bits))
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    mesh = None
+    if args.model_parallel > 1:
+        from repro.launch.mesh import make_serving_mesh
+        mesh = make_serving_mesh(args.model_parallel)
     eng = ServingEngine(
         cfg, params, max_batch=args.max_batch, max_len=args.max_len,
         packed=not args.no_packed, prefill_chunk=args.prefill_chunk,
@@ -62,7 +85,7 @@ def main():
         sampling=SamplingParams(temperature=args.temperature,
                                 top_k=args.top_k),
         hbm_cache_budget=int(args.hbm_cache_budget_mb * 2**20) or None,
-        autotune=args.autotune)
+        autotune=args.autotune, mesh=mesh)
     if args.autotune:
         from repro.kernels import autotune as autotune_lib
         print(f"autotune cache saved to "
@@ -78,8 +101,20 @@ def main():
     rep = eng.metrics.report()
     rep["capacity"] = eng.capacity_report()
     toks = sum(len(r.output) for r in done)
-    print(f"{len(done)} requests, {toks} generated tokens")
-    print(json.dumps(rep, indent=2))
+    # report the ACTUAL shard count: make_serving_mesh clamps (with a
+    # warning) when the host has fewer devices than --model-parallel asked
+    # for, and labeling those numbers as N-way TP would misattribute them
+    shards = eng.shard_plan.model_shards if eng.shard_plan else 1
+    print(f"{len(done)} requests, {toks} generated tokens"
+          + (f" (model-parallel x{shards})" if shards > 1 else ""))
+    if args.metrics:
+        print(json.dumps(rep, indent=2))
+    else:
+        print(f"prefill {rep['prefill_tok_s']} tok/s, "
+              f"decode {rep['decode_tok_s']} tok/s, "
+              f"ttft p50 {rep['ttft_s']['p50']}s, "
+              f"tpot p50 {rep['tpot_s']['p50']}s "
+              f"(--metrics for the full report)")
 
 
 if __name__ == "__main__":

@@ -146,13 +146,18 @@ def make_prefill_step(cfg, max_len: int):
     return prefill_step
 
 
-def make_decode_step(cfg):
+def make_decode_step(cfg, *, kv_shard_axis: str | None = None):
     """Single-token decode step.
 
     ``index`` scalar = lockstep (all rows share one position, the legacy
     path); ``index`` [B] = per-slot positions for ragged continuous
     batching, with optional ``valid`` [B] (1 = live slot, 0 = dead slot:
     no cache write, output ignored).  See DESIGN.md §12.
+
+    ``kv_shard_axis`` names the mesh axis the serving ShardPlan sharded
+    the KV-cache kv-head axis over (None = single-device serving); the
+    attention write path constrains its quantize/pack/scatter to stay
+    head-local on that axis (DESIGN.md §15).
     """
     qmode = quant_mode_for(cfg, "decode")
 
@@ -166,13 +171,14 @@ def make_decode_step(cfg):
             dec["positions"] = idx[:, None]
         logits, _, caches = lm.forward(params, cfg, dec, quant_mode=qmode,
                                        caches=caches, cache_index=idx,
-                                       cache_valid=valid)
+                                       cache_valid=valid,
+                                       kv_shard_axis=kv_shard_axis)
         return logits[:, -1], caches
 
     return decode_step
 
 
-def make_prefill_chunk_step(cfg):
+def make_prefill_chunk_step(cfg, *, kv_shard_axis: str | None = None):
     """Chunked-prefill step: consumes a [B, chunk] token window per slot.
 
     ``index`` [B] is each slot's write offset (tokens already in its cache
@@ -193,7 +199,8 @@ def make_prefill_chunk_step(cfg):
         dec["positions"] = idx[:, None] + jnp.arange(c, dtype=jnp.int32)
         logits, _, caches = lm.forward(params, cfg, dec, quant_mode=qmode,
                                        caches=caches, cache_index=idx,
-                                       cache_valid=vld)
+                                       cache_valid=vld,
+                                       kv_shard_axis=kv_shard_axis)
         last = jnp.clip(vld - 1, 0, c - 1)
         return (jnp.take_along_axis(logits, last[:, None, None],
                                     axis=1)[:, 0], caches)

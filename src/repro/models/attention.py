@@ -178,10 +178,37 @@ def precompute_cross_kv(p, cfg, enc_out, *, quant_mode="none"):
     return k, v
 
 
+def _constrain_kv_heads(tree, axis):
+    """Pin cache-layout tensors to the serving kv-head shard axis.
+
+    ``axis`` is the mesh axis the serving ShardPlan sharded the kv-head
+    dim over (DESIGN.md §15); the constraint keeps the quantize -> pack ->
+    scatter write chain head-local so GSPMD neither gathers the incoming
+    [B, s, KVH, hd] slice nor reshards the ring between steps.  Applies to
+    K/V (and packed-word) tensors [B, S, KVH, hd|words] and the
+    per-(pos, kv-head) scale planes [B, S, KVH]; no-op when ``axis`` is
+    None or outside a mesh context (sharding.constrain guards)."""
+    if axis is None:
+        return tree
+    from repro.parallel.sharding import constrain
+
+    def one(t):
+        if t.ndim == 4:
+            return constrain(t, None, None, axis, None)
+        if t.ndim == 3:
+            return constrain(t, None, None, axis)
+        return t
+
+    if isinstance(tree, dict):
+        return {k: one(v) for k, v in tree.items()}
+    return one(tree)
+
+
 def attention_apply(p, cfg, x, *, positions, quant_mode="none",
                     cache=None, cache_index=None, cache_valid=None,
                     kv_x=None, kv_positions=None, causal=True,
-                    positions3=None, q_chunk=None, cross_kv=None):
+                    positions3=None, q_chunk=None, cross_kv=None,
+                    kv_shard_axis=None):
     """Full attention forward.
 
     ``q_chunk=None`` consults the autotune cache for the fused-attention
@@ -234,6 +261,10 @@ def attention_apply(p, cfg, x, *, positions, quant_mode="none",
 
     if cache is not None and cache_index is not None:
         # ---- decode / chunked prefill: write new k/v into the ring ----
+        # under serving TP the incoming slice and the written ring stay
+        # pinned to the kv-head shard axis (no-op when axis is None)
+        k = _constrain_kv_heads(k, kv_shard_axis)
+        v = _constrain_kv_heads(v, kv_shard_axis)
         size = cache["k"].shape[1]
         idx = jnp.asarray(cache_index)
         if idx.ndim == 0:
@@ -261,6 +292,7 @@ def attention_apply(p, cfg, x, *, positions, quant_mode="none",
                 cache, k, v, slots, offs[None, :] < vlen[:, None], kv_bits)
             kv_pos = _ring_positions_batch(idx + vlen - 1, size,
                                            window)            # [B, size]
+        new_cache = _constrain_kv_heads(new_cache, kv_shard_axis)
         # deferred read: _chunked_attention calls this inside the chunk
         # body, so a packed cache is unpacked+dequantized fused with the
         # score/value einsums (the bf16 cache copy never exists whole)
@@ -289,6 +321,7 @@ def attention_apply(p, cfg, x, *, positions, quant_mode="none",
                              for kk, vv in new_cache.items()}
             else:
                 new_cache = _cache_write(cache, k, v, 0, kv_bits)
+            new_cache = _constrain_kv_heads(new_cache, kv_shard_axis)
         if kv_x is not None:
             kv_pos = (kv_positions if kv_positions is not None
                       else jnp.arange(k.shape[1]))[None, :]

@@ -54,12 +54,15 @@ def block_init(key, cfg, i, *, cross=False, dtype=jnp.float32):
 
 def block_apply(p, cfg, x, *, kind="attn", positions, quant_mode="none",
                 cache=None, cache_index=None, cache_valid=None, causal=True,
-                positions3=None, enc_kv=None, moe_path="einsum"):
+                positions3=None, enc_kv=None, moe_path="einsum",
+                kv_shard_axis=None):
     """One residual block.  Returns (x, new_cache, aux_loss).
 
     ``cache_index`` may be a scalar (lockstep decode) or a [B] vector of
     per-slot write offsets; ``cache_valid`` [B] counts each row's valid-
-    prefix tokens for ragged windows (DESIGN.md §12).
+    prefix tokens for ragged windows (DESIGN.md §12).  ``kv_shard_axis``
+    names the mesh axis a serving ShardPlan sharded the KV-cache kv-head
+    axis over (DESIGN.md §15); None = unsharded serving.
     """
     aux = 0.0
     new_cache = dict(cache) if cache is not None else None
@@ -69,7 +72,8 @@ def block_apply(p, cfg, x, *, kind="attn", positions, quant_mode="none",
         out, sub2 = attention.attention_apply(
             p["attn"], cfg, h, positions=positions, quant_mode=quant_mode,
             cache=sub, cache_index=cache_index, cache_valid=cache_valid,
-            causal=causal, positions3=positions3)
+            causal=causal, positions3=positions3,
+            kv_shard_axis=kv_shard_axis)
         if new_cache is not None and sub2 is not None:
             new_cache["attn"] = sub2
     elif kind == "mamba":
@@ -179,12 +183,15 @@ def _decoder_inputs(params, cfg, batch):
 
 def forward(params, cfg, batch, *, quant_mode="none", caches=None,
             cache_index=None, cache_valid=None, enc_out=None, remat=False,
-            moe_path="einsum"):
+            moe_path="einsum", kv_shard_axis=None):
     """Full forward.  Returns (logits, aux_loss, new_caches).
 
     ``cache_index`` scalar = lockstep decode; [B] vector = per-slot cache
     write offsets (ragged continuous batching).  ``cache_valid`` [B] is the
     per-row valid-prefix length of the current window (chunked prefill).
+    ``kv_shard_axis`` (serving TP, DESIGN.md §15) pins attention's KV-cache
+    quantize/pack/write to the kv-head shard axis so GSPMD never reshards
+    the cache between steps.
     """
     import os
     seq_ax = "model" if os.environ.get("REPRO_SEQ_ACT", "0") == "1" \
@@ -207,7 +214,7 @@ def forward(params, cfg, batch, *, quant_mode="none", caches=None,
             blk, cfg, x, kind=kind, positions=positions,
             quant_mode=quant_mode, cache=sub, cache_index=cache_index,
             cache_valid=cache_valid, causal=True, positions3=positions3,
-            enc_kv=enc_kv, moe_path=moe_path)
+            enc_kv=enc_kv, moe_path=moe_path, kv_shard_axis=kv_shard_axis)
 
     for li, blk in enumerate(params["layers"]):
         if cfg.is_encoder_decoder:

@@ -274,9 +274,22 @@ def batch_shardings(batch, cfg, mesh: Mesh, global_batch: int):
 
 
 def cache_shardings(caches, cfg, mesh: Mesh, global_batch: int,
-                    sequence_parallel: bool = False):
+                    sequence_parallel: bool = False,
+                    kv_head_shard: bool = False):
     """KV/state cache sharding.  decode_32k: batch over DP.  long_500k
-    (batch=1): sequence over 'data' (SP) and head_dim over 'model'."""
+    (batch=1): sequence over 'data' (SP) and head_dim over 'model'.
+
+    ``kv_head_shard=True`` is the serving-TP layout (serve/shard.ShardPlan,
+    DESIGN.md §15): attention K/V shard the kv-head axis (axis 2 of
+    [B, S, KVH, hd]) over 'model' and the per-(pos, kv-head) scale planes
+    [B, S, KVH] shard the same axis — valid for every storage precision
+    cfg.quant.kv_bits selects, because quantization, word-packing and
+    fused-dequant reads are all per-(pos, kv-head) local: a sub-byte
+    cache's int32 words pack along head_dim *within* one kv head, so a
+    head shard holds whole, locally-decodable words.  Head-dim sharding
+    (the training default below) would instead split words across devices
+    for packed caches and replicate the cache whenever kv_heads < axis
+    size."""
     bp = batch_pspec(cfg, mesh, global_batch)
     bp0 = bp[0] if len(bp) else None
 
@@ -289,9 +302,15 @@ def cache_shardings(caches, cfg, mesh: Mesh, global_batch: int,
         if leaf is None or not shape:
             return NamedSharding(mesh, P())
         if re.search(r"attn/(k_scale|v_scale)$", ps):
+            if kv_head_shard:
+                return NamedSharding(mesh, _guard(mesh, shape,
+                                                  P(bp0, None, "model")))
             seq_ax = "model" if seq_shard else None
             return NamedSharding(mesh, _guard(mesh, shape,
                                               P(bp0, seq_ax, None)))
+        if kv_head_shard and re.search(r"attn/(k|v)$", ps):
+            return NamedSharding(mesh, _guard(
+                mesh, shape, P(bp0, None, "model", None)))
         if re.search(r"attn/(k|v)$", ps) or re.search(r"cross_kv", ps):
             if seq_shard:
                 # canonical decode pattern: KV sharded over sequence,

@@ -20,6 +20,7 @@ execution plan per layer, chosen offline).
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from collections import deque
@@ -56,6 +57,7 @@ class Request:
     done: bool = False
     submit_time: float = 0.0
     admit_time: float = 0.0
+    first_token_time: float = 0.0
     finish_time: float = 0.0
 
 
@@ -70,6 +72,13 @@ class Metrics:
     tokens by the wall time of the same passes.  Tokens sampled inside a
     mixed prefill pass (decode riders, first token after a prompt
     completes) count as generated but land in the prefill time bucket.
+
+    Per-request latency: ``ttft_s`` records one time-to-first-token sample
+    per request (submit -> first sampled token, so queue wait counts —
+    the number a client sees); ``tpot_s`` one time-per-output-token sample
+    per *retired* request with >= 2 output tokens (first token -> finish,
+    per subsequent token).  ``report()`` surfaces mean / p50 / p95 of
+    both (DESIGN.md §12).
     """
     prefill_tokens: int = 0
     generated_tokens: int = 0
@@ -83,6 +92,17 @@ class Metrics:
     slot_steps_live: int = 0
     slot_steps_total: int = 0
     admission_wait_s: float = 0.0
+    ttft_s: list = dataclasses.field(default_factory=list)
+    tpot_s: list = dataclasses.field(default_factory=list)
+
+    @staticmethod
+    def _dist(samples) -> dict:
+        if not samples:
+            return {"mean": 0.0, "p50": 0.0, "p95": 0.0}
+        arr = np.asarray(samples, np.float64)
+        return {"mean": round(float(arr.mean()), 5),
+                "p50": round(float(np.percentile(arr, 50)), 5),
+                "p95": round(float(np.percentile(arr, 95)), 5)}
 
     def report(self) -> dict:
         def div(a, b):
@@ -103,6 +123,8 @@ class Metrics:
                                    self.slot_steps_total), 3),
             "mean_admission_wait_s": round(div(self.admission_wait_s,
                                                self.admitted), 5),
+            "ttft_s": self._dist(self.ttft_s),
+            "tpot_s": self._dist(self.tpot_s),
         }
 
 
@@ -116,8 +138,23 @@ class ServingEngine:
                  max_queue: int | None = None,
                  sampling: SamplingParams | None = None,
                  hbm_cache_budget: int | None = None,
-                 autotune: bool = False):
+                 autotune: bool = False, mesh=None):
         self.cfg = cfg
+        # Mesh-native serving (DESIGN.md §15): with a mesh, a ShardPlan
+        # makes the cross-device layout explicit — packed weights
+        # column-parallel (word boundaries shard-local), caches sharded on
+        # the kv-head axis — and params/caches are placed before the steps
+        # are jitted, so GSPMD partitions both jitted steps against
+        # committed shardings.  mesh=None (or model axis 1) degrades to
+        # the single-device layout: every spec guards to replicated.
+        self.mesh = mesh
+        self.shard_plan = None
+        self._tp_axis = None
+        if mesh is not None:
+            from repro.serve.shard import ShardPlan
+            self.shard_plan = ShardPlan(mesh)
+            if self.shard_plan.model_shards > 1:
+                self._tp_axis = self.shard_plan.axis
         # Slot capacity is cache-bytes-aware: with an explicit HBM cache
         # budget the engine admits budget // bytes-per-slot concurrent
         # sequences, so quantized caches (cfg.quant.kv_bits in {8, 4, 2})
@@ -148,18 +185,27 @@ class ServingEngine:
             if packed else params
         # Kernel plans are fixed at engine init (paper §IV: one execution
         # plan per layer, chosen offline) for both jitted row counts —
-        # decode (max_batch rows) and chunked prefill (max_batch * chunk).
+        # decode (max_batch rows) and chunked prefill (max_batch * chunk);
+        # under a shard plan they are built against per-shard local output
+        # widths, what one device actually executes.
         # ``autotune=True`` warm-tunes missing signatures first (the
         # tune-once-offline deployment pass, DESIGN.md §14).
         self.plans = build_layer_plans(
             self.params, cfg, batch_rows=max_batch,
             prefill_rows=max_batch * self.prefill_chunk,
-            autotune=autotune) if packed else {}
-        self._decode = jax.jit(steps_lib.make_decode_step(cfg))
-        self._prefill = jax.jit(steps_lib.make_prefill_chunk_step(cfg))
+            autotune=autotune, shard_plan=self.shard_plan) if packed else {}
+        if self.shard_plan is not None:
+            self.params = self.shard_plan.place_params(self.params)
+        self._decode = jax.jit(
+            steps_lib.make_decode_step(cfg, kv_shard_axis=self._tp_axis))
+        self._prefill = jax.jit(steps_lib.make_prefill_chunk_step(
+            cfg, kv_shard_axis=self._tp_axis))
         self._queue: deque[Request] = deque()
         self.caches = lm.init_caches(cfg, max_batch, max_len,
                                      dtype=jnp.bfloat16)
+        if self.shard_plan is not None:
+            self.caches = self.shard_plan.place_caches(self.caches, cfg,
+                                                       max_batch)
         # batch-1 fresh-cache template: admission resets a slot's rows from
         # it (recurrent states have non-zero init, e.g. mLSTM m = -inf)
         self._fresh = lm.init_caches(cfg, 1, max_len, dtype=jnp.bfloat16)
@@ -170,6 +216,16 @@ class ServingEngine:
         self._slot_rng: list = [None] * max_batch
         self._finished: list = []
         self.metrics = Metrics()
+
+    def _mesh_ctx(self):
+        """Announce the serving mesh to sharding.constrain() for the
+        duration of a jitted-step call — constrain() and the sharded-vocab
+        embedding path read the active mesh at trace time, so the first
+        call under this context bakes the mesh into both executables."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        from repro.parallel.sharding import activation_mesh
+        return activation_mesh(self.mesh)
 
     # ------------------------------------------------------------------
     # Submission / admission
@@ -282,9 +338,10 @@ class ServingEngine:
         batch = {"tokens": jnp.asarray(tokens)}
         if self.cfg.mrope:
             batch["positions3"] = self._positions3(index, c)
-        logits, self.caches = self._prefill(
-            self.params, self.caches, batch, jnp.asarray(index),
-            jnp.asarray(valid))
+        with self._mesh_ctx():
+            logits, self.caches = self._prefill(
+                self.params, self.caches, batch, jnp.asarray(index),
+                jnp.asarray(valid))
         logits = np.asarray(logits)
         for s in live:
             req = self.slot_req[s]
@@ -312,9 +369,10 @@ class ServingEngine:
         batch = {"tokens": jnp.asarray(tokens)}
         if self.cfg.mrope:
             batch["positions3"] = self._positions3(index, 1)
-        logits, self.caches = self._decode(
-            self.params, self.caches, batch, jnp.asarray(index),
-            jnp.asarray(valid))
+        with self._mesh_ctx():
+            logits, self.caches = self._decode(
+                self.params, self.caches, batch, jnp.asarray(index),
+                jnp.asarray(valid))
         logits = np.asarray(logits)
         for s in live:
             self.slot_pos[s] += 1
@@ -329,9 +387,17 @@ class ServingEngine:
         self.metrics.generated_tokens += 1
         if decode_pass:
             self.metrics.decode_tokens += 1
+        if len(req.output) == 1:
+            req.first_token_time = time.perf_counter()
+            self.metrics.ttft_s.append(req.first_token_time
+                                       - req.submit_time)
         if len(req.output) >= req.max_new_tokens:
             req.done = True
             req.finish_time = time.perf_counter()
+            if len(req.output) > 1:
+                self.metrics.tpot_s.append(
+                    (req.finish_time - req.first_token_time)
+                    / (len(req.output) - 1))
             self._finished.append(req)
             self.metrics.retired += 1
             self.slot_req[s] = None
@@ -366,12 +432,15 @@ class ServingEngine:
 
     def capacity_report(self) -> dict:
         """Cache-capacity accounting: bytes per slot and admitted slots."""
-        return {
+        rep = {
             "kv_bits": getattr(self.cfg.quant, "kv_bits", 0) or 16,
             "cache_bytes_per_slot": self.cache_bytes_per_slot,
             "hbm_cache_budget": self.hbm_cache_budget,
             "slots": self.max_batch,
         }
+        if self.shard_plan is not None:
+            rep["shard_plan"] = self.shard_plan.describe()
+        return rep
 
     def run_to_completion(self):
         """Drain queue + slots; returns every request retired since the

@@ -55,7 +55,8 @@ def prepare_serving_params(params, cfg, *, dense_store: bool = False):
 
 def build_layer_plans(params, cfg, *, batch_rows: int = 1,
                       prefill_rows: int | None = None,
-                      backend: str = "auto", autotune: bool = False):
+                      backend: str = "auto", autotune: bool = False,
+                      shard_plan=None):
     """One KernelPlan per packed Dense leaf, keyed by its tree path.
 
     ``batch_rows`` is the decode-time row count (engine batch);
@@ -63,6 +64,21 @@ def build_layer_plans(params, cfg, *, batch_rows: int = 1,
     chunked-prefill shapes under a ``...@prefill`` key.  Plans are
     memoized, so both jitted serving steps hit exactly these objects when
     they dispatch.  Returns {'path/to/leaf': KernelPlan}.
+
+    ``shard_plan`` (serve/shard.ShardPlan) adds *per-shard local* planning:
+    packed weights are column-parallel under the serving mesh, so what one
+    device executes is [rows, kp] x [kp, n / model_shards].  The primary
+    ``path`` entries plan (and with ``autotune=True`` warm-tune) that
+    local matmul — per-shard VMEM working sets and the autotune-cache
+    signatures a shard_map'd per-device kernel dispatch consults.  The
+    GSPMD-jitted XLA serving steps, however, trace *global* operand
+    shapes and re-plan through the memoized planners at trace time; for
+    every leaf whose output actually shards, ``...@global`` entries
+    pre-memoize (and warm-tune) exactly those signatures too, so dispatch
+    still hits init-built — and, when tuned, cache-backed — plans rather
+    than planning ad hoc mid-trace (DESIGN.md §15).  K is never sharded
+    (word boundaries stay shard-local), so ``kp``/``k_full`` are global
+    in both modes.
 
     ``autotune=True`` is the opt-in warm-tune pass (DESIGN.md §14): every
     (rows, kp, n) signature missing from the active tuning cache is
@@ -90,7 +106,9 @@ def build_layer_plans(params, cfg, *, batch_rows: int = 1,
         if _is_packed(node):
             dense = "w_dense" in node
             w = node["w_dense"] if dense else node["w_packed"]
-            n = w.shape[-1]
+            n_global = w.shape[-1]
+            n = shard_plan.local_out(n_global) if shard_plan is not None \
+                else n_global
             if dense:
                 per = 32 // spec.w_bits
                 k_full = int(node.get("k_full", w.shape[0] * per))
@@ -101,6 +119,15 @@ def build_layer_plans(params, cfg, *, batch_rows: int = 1,
             if prefill_rows and prefill_rows != batch_rows:
                 plans[f"{path}@prefill"] = plan_rows(prefill_rows, kp, n,
                                                      dense, k_full)
+            if n != n_global:
+                # GSPMD dispatch signatures (see docstring): the jitted
+                # steps re-plan from global trace-time shapes, so memoize
+                # + warm-tune those too
+                plans[f"{path}@global"] = plan_rows(batch_rows, kp,
+                                                    n_global, dense, k_full)
+                if prefill_rows and prefill_rows != batch_rows:
+                    plans[f"{path}@global@prefill"] = plan_rows(
+                        prefill_rows, kp, n_global, dense, k_full)
             return
         if isinstance(node, dict):
             for k, v in node.items():
