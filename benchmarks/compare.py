@@ -148,10 +148,28 @@ def compare(baseline: dict, current: dict, *, tolerance: float = 0.25,
         cur_rows = cur_f.get(bench)
         for case, base_row in base_rows.items():
             cur_row = (cur_rows or {}).get(case, {})
+            # Lane-layout identity (DESIGN.md §16): rows that record the
+            # PackSpec their timings were measured under (``spec``) are only
+            # apples-to-apples when both runs chose the same layout.  When
+            # the autotuner picked a different layout, surface that as an
+            # explicit layout-changed finding and demote the row's ratio
+            # metrics to report-only rather than silently gating a
+            # cross-layout comparison.
+            b_spec, c_spec = base_row.get("spec"), cur_row.get("spec")
+            layout_changed = (isinstance(b_spec, str)
+                              and isinstance(c_spec, str)
+                              and b_spec != c_spec)
+            if layout_changed:
+                findings.append({"bench": bench, "case": case,
+                                 "metric": "spec", "base": b_spec,
+                                 "cur": c_spec, "delta_pct": None,
+                                 "gated": False,
+                                 "status": "layout-changed"})
             for metric, base_v in base_row.items():
                 if metric_direction(metric) is None:
                     continue
-                gated = is_gated(metric, extra_gates, gate_absolute)
+                gated = is_gated(metric, extra_gates, gate_absolute) \
+                    and not layout_changed
                 b = _num(base_v)
                 if gated and "speedup" in metric and b is not None and \
                         NEAR_UNITY_BAND[0] <= b <= NEAR_UNITY_BAND[1]:
@@ -169,7 +187,14 @@ def gate_failures(findings: list[dict]) -> list[dict]:
 # Reporting
 # ---------------------------------------------------------------------------
 
-_MARK = {"ok": "✓", "improved": "▲", "regressed": "✗", "missing": "∅"}
+_MARK = {"ok": "✓", "improved": "▲", "regressed": "✗", "missing": "∅",
+         "layout-changed": "↻"}
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return "—"
+    return f"{v:g}" if isinstance(v, (int, float)) else str(v)
 
 
 def to_markdown(findings: list[dict], tolerance: float) -> str:
@@ -184,17 +209,16 @@ def to_markdown(findings: list[dict], tolerance: float) -> str:
              ""]
     shown = [f for f in findings
              if f["gated"] or f["status"] in ("regressed", "missing",
-                                              "improved")]
+                                              "improved", "layout-changed")]
     if shown:
         lines += ["| bench | case | metric | base | current | Δ% | gated "
                   "| status |",
                   "|---|---|---|---|---|---|---|---|"]
         for f in shown:
-            cur = "—" if f["cur"] is None else f"{f['cur']:g}"
             delta = "—" if f["delta_pct"] is None else f"{f['delta_pct']:+g}"
             lines.append(
                 f"| {f['bench']} | {f['case']} | {f['metric']} "
-                f"| {f['base']:g} | {cur} | {delta} "
+                f"| {_fmt(f['base'])} | {_fmt(f['cur'])} | {delta} "
                 f"| {'yes' if f['gated'] else ''} "
                 f"| {_MARK[f['status']]} {f['status']} |")
     else:

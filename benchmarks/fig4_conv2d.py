@@ -20,8 +20,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import (cost_of, emit, tuned_vs_heuristic_row,
-                               wall_us)
+from benchmarks.common import (cost_of, emit, record,
+                               tuned_vs_heuristic_row, wall_us)
 from repro.core import packing, vmacsr
 from repro.core.packing import PackSpec
 from repro.kernels import ops, ref
@@ -133,6 +133,7 @@ def run(quick: bool = False):
                 "measured_speedup", "paper_speedup", "plan"])
     _sweep_block_h(rng, h, w, quick)
     rows += _tuned_vs_heuristic(rng, h, w)
+    rows += _layout_sweep(rng, h, w)
     return rows
 
 
@@ -207,6 +208,56 @@ def _tuned_vs_heuristic(rng, h, w):
                 xp, wt, spec, padding="VALID", plan=plan)))
     emit(rows, ["case", "heuristic_us", "tuned_us", "tuned_speedup",
                 "plan_source", "plan"])
+    return rows
+
+
+def _layout_sweep(rng, h, w):
+    """Chosen lane layout vs the fixed-layout heuristic at the paper's conv
+    shape (W2A2, lanes store), measured through the same Pallas dispatch.
+
+    The candidate layout comes from the committed layout cache
+    (autotune.conv2d_layout_for; warm-tuned by ``benchmarks.run
+    --autotune``); each side packs its own weights — the offline decision
+    this axis tunes.  On a layout-cache miss the chosen spec IS the config
+    default (speedup 1.0).  The chosen layout's output is asserted
+    bit-exact against the unpacked int32 reference before it is timed
+    (DESIGN.md §16)."""
+    from repro.kernels import autotune
+
+    base = PackSpec(2, 2, jnp.int16.dtype)
+    q_x = _lattice(rng, (1, h, w, CIN), base.a_bits)
+    q_w = _lattice(rng, (FH, FW, CIN, COUT), base.w_bits)
+    want = np.asarray(ref.conv2d_i32_ref(q_x, q_w, padding="VALID"))
+    chosen = autotune.conv2d_layout_for(
+        (1, h, w, CIN), (FH, FW, CIN, COUT), base, padding="VALID",
+        backend="pallas", weight_store="lanes")
+
+    def operands(spec):
+        return (packing.pack_activations(q_x, spec, axis=-1),
+                packing.pack_weights(q_w, spec, axis=2))
+
+    kw = dict(padding="VALID", backend="pallas", weight_store="lanes")
+    xb, wb = operands(base)
+    heur = plan_lib.plan_packed_conv2d(tuple(xb.shape), tuple(wb.shape),
+                                       base, use_tuning_cache=False, **kw)
+    heur_us = wall_us(lambda: ops.packed_conv2d(
+        xb, wb, base, padding="VALID", plan=heur), iters=1, warmup=1)
+    xc, wc = operands(chosen)
+    tuned = plan_lib.plan_packed_conv2d(tuple(xc.shape), tuple(wc.shape),
+                                        chosen, **kw)
+    got = ops.packed_conv2d(xc, wc, chosen, padding="VALID", plan=tuned)
+    np.testing.assert_array_equal(np.asarray(got), want)
+    tuned_us = heur_us if (chosen, tuned) == (base, heur) else wall_us(
+        lambda: ops.packed_conv2d(xc, wc, chosen, padding="VALID",
+                                  plan=tuned), iters=1, warmup=1)
+    rows = [record("layout-sweep/lanes",
+                   heuristic_us=round(heur_us, 1),
+                   tuned_us=round(tuned_us, 1),
+                   tuned_speedup=round(heur_us / tuned_us, 2),
+                   spec=str(chosen), base_spec=str(base),
+                   plan_source=tuned.source, plan=str(tuned))]
+    emit(rows, ["case", "heuristic_us", "tuned_us", "tuned_speedup",
+                "spec", "base_spec", "plan_source", "plan"])
     return rows
 
 

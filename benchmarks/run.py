@@ -53,6 +53,10 @@ def warm_tune(quick: bool) -> str:
                 (1, hw, hw, cp), (f, f, cdim, co), spec, padding="VALID",
                 backend="pallas", weight_store=store,
                 k_full=cin if store == "dense" else None)
+        # lane-layout axis (PackSpec family sweep, DESIGN.md §16): tiles
+        # per candidate land in the same cache via tune_packed_conv2d
+        autotune.tune_conv2d_layout((1, hw, hw, cin), (f, f, cin, co),
+                                    spec, padding="VALID", backend="pallas")
     # decode-shaped serving linears (pallas tile grid); full adds the
     # table2 decode linear
     shapes = [serve_microbench.TUNED_LINEAR_SHAPE, (8, 1024, 1024)]
@@ -62,6 +66,7 @@ def warm_tune(quick: bool) -> str:
     for m, k, n in shapes:
         autotune.tune_packed_matmul(m, -(-k // spec.n_pack), n, spec,
                                     backend="pallas")
+        autotune.tune_matmul_layout(m, k, n, spec, backend="pallas")
     if not quick:
         autotune.tune_attention_chunk(2, 64, 64, 4, 2, 64, kv_bits=4)
         autotune.tune_attention_chunk(2, 64, 64, 4, 2, 64, kv_bits=0)

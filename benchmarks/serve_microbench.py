@@ -29,8 +29,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import (cost_of, emit, tuned_vs_heuristic_row,
-                               wall_us)
+from benchmarks.common import (cost_of, emit, record,
+                               tuned_vs_heuristic_row, wall_us)
 from repro.core import packing
 from repro.core.packing import PackSpec
 from repro.kernels import ops
@@ -112,6 +112,59 @@ def _tuned_vs_heuristic_linear():
         lambda plan: ops.packed_matmul(ap, wp, spec, plan=plan))]
     emit(rows, ["case", "heuristic_us", "tuned_us", "tuned_speedup",
                 "plan_source", "plan"])
+    rows += _layout_sweep_linear()
+    return rows
+
+
+def _layout_sweep_linear():
+    """Chosen lane layout vs the fixed-layout heuristic at the decode
+    linear shape (W2A2, lanes store), through the same Pallas dispatch —
+    the matmul counterpart of fig4's layout-sweep row.
+
+    The candidate layout comes from the committed layout cache
+    (autotune.matmul_layout_for; warm-tuned by ``benchmarks.run
+    --autotune``); each side packs its own operands, since the layout is
+    the offline packing decision this axis tunes.  On a layout-cache miss
+    the chosen spec IS the config default (speedup 1.0).  The chosen
+    layout's output is asserted bit-exact against the unpacked int32
+    reference before it is timed (DESIGN.md §16)."""
+    from repro.kernels import autotune, ref
+
+    m, k, n = TUNED_LINEAR_SHAPE
+    base = PackSpec(2, 2, jnp.int16.dtype)
+    rng = np.random.default_rng(2)
+    q_a = jnp.asarray(rng.integers(0, base.max_a + 1, (m, k)), jnp.int32)
+    q_w = jnp.asarray(rng.integers(0, base.max_w + 1, (k, n)), jnp.int32)
+    want = np.asarray(ref.matmul_i32_ref(q_a, q_w))
+    chosen = autotune.matmul_layout_for(k, n, base, backend="pallas",
+                                        weight_store="lanes")
+
+    def operands(spec):
+        return (packing.pack_activations(q_a, spec, axis=-1),
+                packing.pack_weights(q_w, spec, axis=0))
+
+    ab, wb = operands(base)
+    heur = plan_lib.plan_packed_matmul(m, ab.shape[-1], n, base,
+                                       backend="pallas",
+                                       use_tuning_cache=False)
+    heur_us = wall_us(lambda: ops.packed_matmul(ab, wb, base, plan=heur),
+                      iters=1, warmup=1)
+    ac, wc = operands(chosen)
+    tuned = plan_lib.plan_packed_matmul(m, ac.shape[-1], n, chosen,
+                                        backend="pallas")
+    got = ops.packed_matmul(ac, wc, chosen, plan=tuned)
+    np.testing.assert_array_equal(np.asarray(got), want)
+    tuned_us = heur_us if (chosen, tuned) == (base, heur) else wall_us(
+        lambda: ops.packed_matmul(ac, wc, chosen, plan=tuned),
+        iters=1, warmup=1)
+    rows = [record("layout-sweep/linear",
+                   heuristic_us=round(heur_us, 1),
+                   tuned_us=round(tuned_us, 1),
+                   tuned_speedup=round(heur_us / tuned_us, 2),
+                   spec=str(chosen), base_spec=str(base),
+                   plan_source=tuned.source, plan=str(tuned))]
+    emit(rows, ["case", "heuristic_us", "tuned_us", "tuned_speedup",
+                "spec", "base_spec", "plan_source", "plan"])
     return rows
 
 

@@ -116,6 +116,7 @@ def run(quick: bool = False):
     emit(rows, ["path", "flops", "bytes", "intensity_flops_per_byte",
                 "float_type_mentions", "int_type_mentions", "weight_bytes"])
     rows += _autotune_report(spec, kp)
+    rows += _layout_report(spec)
     return rows
 
 
@@ -150,6 +151,45 @@ def _autotune_report(spec, kp):
             candidates=entry.get("candidates", 0)))
     emit(rows, ["case", "plan_source", "heuristic_us", "tuned_us",
                 "tuned_speedup", "vmem_bytes", "candidates"])
+    return rows
+
+
+def _layout_report(spec):
+    """Lane-layout sweep winners (DESIGN.md §16), straight from the layout
+    cache: per signature, the chosen PackSpec and its measured win over the
+    config-default layout (``layout_speedup`` = base_us / wall_us; both
+    values were measured by ``tune_*_layout`` with tuned tiles, so this
+    report costs no re-measurement).  A cache miss reports the config
+    default at 1.0 — the fixed-layout behavior."""
+    from benchmarks import fig4_conv2d as fig4
+
+    keys = {
+        "matmul-decode": autotune.matmul_layout_key(
+            K, N, spec.w_bits, spec.a_bits, backend="pallas"),
+        "conv-lanes": autotune.conv2d_layout_key(
+            (1, fig4.H, fig4.H, fig4.CIN),
+            (fig4.FH, fig4.FW, fig4.CIN, fig4.COUT), spec.w_bits,
+            spec.a_bits, padding="VALID", backend="pallas"),
+    }
+    rows = []
+    for name, key in keys.items():
+        entry = autotune.lookup(key)
+        if entry is None:
+            rows.append(record(f"layout/{name}", spec=str(spec),
+                               base_spec=str(spec), layout_speedup=1.0,
+                               candidates=0))
+            continue
+        wall_us = entry.get("wall_us") or 0.0
+        base_us = entry.get("base_us") or 0.0
+        rows.append(record(
+            f"layout/{name}", spec=entry.get("spec", str(spec)),
+            base_spec=entry.get("base_spec", str(spec)),
+            wall_us=wall_us, base_us=base_us,
+            layout_speedup=(round(base_us / wall_us, 2)
+                            if wall_us and base_us else 1.0),
+            candidates=entry.get("candidates", 0)))
+    emit(rows, ["case", "spec", "base_spec", "base_us", "wall_us",
+                "layout_speedup", "candidates"])
     return rows
 
 

@@ -23,18 +23,36 @@ dtypes (int8/int16/int32); quantizers (core/quant.py) guarantee value ranges.
 from __future__ import annotations
 
 import dataclasses
+import re
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-# Lane dtype -> field shift S for 2-way packing (field width = S bits).
+# Lane dtype -> default field shift S for 2-way packing (field width = S bits).
 LANE_SHIFT = {jnp.int8.dtype: 4, jnp.int16.dtype: 8, jnp.int32.dtype: 16}
 
 # Signed-lane headroom: packed value must stay <= max of the *signed* lane
 # dtype (the MXU consumes signed integers).
 LANE_MAX = {jnp.int8.dtype: 127, jnp.int16.dtype: 32767, jnp.int32.dtype: 2**31 - 1}
+
+# The candidate lane-layout family the autotuner sweeps: every structurally
+# valid (lane_dtype, n_pack, shift) triple with byte-friendly field strides.
+# Which members are *feasible* depends on (w_bits, a_bits) — see
+# :func:`layout_family`.  The int16 P2/s8 entry is the config default.
+LAYOUT_FAMILY = (
+    ("int8", 2, 4),
+    ("int16", 2, 8),     # default P1/P2 layout
+    ("int16", 4, 4),     # binary P4 extension
+    ("int32", 2, 8),
+    ("int32", 2, 16),    # wide fields: huge k_tile, fewest extractions
+    ("int32", 4, 8),
+)
+
+
+def _family_str() -> str:
+    return ", ".join(f"{lane}xP{n}s{s}" for lane, n, s in LAYOUT_FAMILY)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,33 +62,70 @@ class PackSpec:
     Attributes:
       w_bits / a_bits: weight / activation precision (unsigned lattice width).
       lane_dtype:      integer dtype of the packed lane fed to the MXU.
-      n_pack:          operands per lane (2, or 4 for the binary P4 extension).
+      n_pack:          operands per lane (2, or 4 for the P4 extension).
+      shift:           field stride in bits (None -> lane default: LANE_SHIFT
+                       for n_pack=2, lane_bits/4 for n_pack=4).
+
+    Construction validates *structure* only (lane dtype, n_pack, field span);
+    whether a given (w_bits, a_bits) pair fits the layout overflow-free is the
+    separate :attr:`feasible` predicate, so infeasible specs stay inspectable
+    (Fig. 5 region tables).  Config-level entry points (:meth:`from_config`,
+    the planners) reject infeasible specs outright.
     """
 
     w_bits: int
     a_bits: int
     lane_dtype: jnp.dtype = jnp.int16.dtype
     n_pack: int = 2
+    shift: int | None = None
 
     def __post_init__(self):
         object.__setattr__(self, "lane_dtype", jnp.dtype(self.lane_dtype))
+        if self.lane_dtype not in LANE_SHIFT:
+            raise ValueError(
+                f"lane_dtype must be one of int8/int16/int32, got "
+                f"{self.lane_dtype}; supported layout family: {_family_str()}")
+        lane_bits = 8 * self.lane_dtype.itemsize
         if self.n_pack not in (2, 4):
-            raise ValueError(f"n_pack must be 2 or 4, got {self.n_pack}")
-        if self.n_pack == 4 and self.lane_dtype != jnp.int16.dtype:
-            raise ValueError("P4 packing is only defined for int16 lanes")
+            raise ValueError(
+                f"n_pack must be 2 or 4, got {self.n_pack}; supported layout "
+                f"family: {_family_str()}")
+        if self.shift is None:
+            default = (LANE_SHIFT[self.lane_dtype] if self.n_pack == 2
+                       else lane_bits // 4)
+            object.__setattr__(self, "shift", default)
+        if not isinstance(self.shift, int) or self.shift < 1:
+            raise ValueError(
+                f"shift must be a positive int, got {self.shift!r}; "
+                f"supported layout family: {_family_str()}")
+        if self.n_pack * self.shift > lane_bits:
+            raise ValueError(
+                f"{self.n_pack} fields of {self.shift} bits do not fit a "
+                f"{lane_bits}-bit lane; supported layout family: "
+                f"{_family_str()}")
 
     @classmethod
     def from_config(cls, qcfg) -> "PackSpec":
         """Build from a QuantConfig-like object (w_bits, a_bits, lane_dtype,
-        n_pack) — the one blessed conversion, shared by every layer."""
-        return cls(qcfg.w_bits, qcfg.a_bits, jnp.dtype(qcfg.lane_dtype),
-                   qcfg.n_pack)
+        n_pack, optional pack_shift) — the one blessed conversion, shared by
+        every layer.  Raises at config time if the configured layout cannot
+        hold the configured bit widths overflow-free."""
+        spec = cls(qcfg.w_bits, qcfg.a_bits, jnp.dtype(qcfg.lane_dtype),
+                   qcfg.n_pack, getattr(qcfg, "pack_shift", None))
+        spec.validate()
+        return spec
 
-    @property
-    def shift(self) -> int:
-        if self.n_pack == 2:
-            return LANE_SHIFT[self.lane_dtype]
-        return 4  # P4: four 4-bit fields in an int16 lane.
+    def validate(self) -> "PackSpec":
+        """Raise unless (w_bits, a_bits) is overflow-free under this layout."""
+        if not self.feasible:
+            raise ValueError(
+                f"{self} is outside the overflow-free region: "
+                f"k_tile_bound(w={self.w_bits}, a={self.a_bits}, "
+                f"shift={self.shift}, n_pack={self.n_pack}) = {self.k_tile} "
+                f"(need >= 1 and the packed value must fit the signed lane). "
+                f"Feasible layouts for W{self.w_bits}A{self.a_bits}: "
+                f"{[str(s) for s in layout_family(self.w_bits, self.a_bits)]}")
+        return self
 
     @property
     def field_mask(self) -> int:
@@ -95,20 +150,44 @@ class PackSpec:
 
     @property
     def packed_value_fits(self) -> bool:
-        """Does the largest packed operand fit the signed lane dtype?"""
+        """Does the largest packed operand fit the signed lane dtype?
+
+        No product-magnitude bound is needed on top: s32 accumulation wraps
+        mod 2^32, and bands strictly above the D band wrap harmlessly as long
+        as the full packed layout spans <= 32 bits (``n_pack * shift <= 32``,
+        guaranteed structurally).  Shift-mask extraction of D stays exact iff
+        the L-carry and D-field constraints hold — that is ``k_tile_bound``,
+        checked by :attr:`feasible` (DESIGN.md §16).
+        """
         stride = 1 << self.shift
         weights = sum(stride**i for i in range(self.n_pack))
         biggest = max(self.max_w, self.max_a) * weights
-        # products must also accumulate exactly in int32 over a k_tile.
-        kt = max(self.k_tile, 1)
-        prod_bound = (self.max_a * weights) * (self.max_w * weights) * kt
-        return biggest <= LANE_MAX[self.lane_dtype] and prod_bound < 2**31
+        return biggest <= LANE_MAX[self.lane_dtype]
 
     def __str__(self):
         return (
             f"W{self.w_bits}A{self.a_bits}/{np.dtype(self.lane_dtype).name}"
-            f"xP{self.n_pack}"
+            f"xP{self.n_pack}s{self.shift}"
         )
+
+    _STR_RE = re.compile(
+        r"^W(\d+)A(\d+)/(int8|int16|int32)xP(\d+)(?:s(\d+))?$")
+
+    @classmethod
+    def parse(cls, text: str) -> "PackSpec":
+        """Inverse of ``str(spec)`` (used by the autotune layout cache).
+
+        The shift suffix is optional for compatibility with pre-layout-sweep
+        key strings; it then resolves to the lane default.
+        """
+        m = cls._STR_RE.match(text.strip())
+        if not m:
+            raise ValueError(
+                f"cannot parse PackSpec from {text!r} "
+                f"(expected e.g. 'W2A2/int16xP2s8')")
+        w, a, lane, n, s = m.groups()
+        return cls(int(w), int(a), jnp.dtype(lane), int(n),
+                   int(s) if s is not None else None)
 
 
 def k_tile_bound(w_bits: int, a_bits: int, shift: int, n_pack: int = 2) -> int:
@@ -135,6 +214,25 @@ def k_tile_bound(w_bits: int, a_bits: int, shift: int, n_pack: int = 2) -> int:
     low_cap = (1 << (shift * (n_pack - 1))) - 1
     k_l = low_cap // low_per_lane if low_per_lane else k_d
     return max(0, min(k_d, k_l))
+
+
+def layout_family(w_bits: int, a_bits: int,
+                  base: "PackSpec | None" = None) -> tuple:
+    """Feasible candidate layouts for (w_bits, a_bits), ``base`` first.
+
+    Every member packs/extracts bit-exactly (k_tile >= 1 and the packed value
+    fits the signed lane), so the autotuner can sweep them freely — only
+    overflow-free layouts are ever candidates.  ``base`` (the config-derived
+    spec, when feasible) leads so ties resolve toward the default layout.
+    """
+    out = []
+    if base is not None and base.feasible:
+        out.append(base)
+    for lane, n_pack, shift in LAYOUT_FAMILY:
+        spec = PackSpec(w_bits, a_bits, jnp.dtype(lane), n_pack, shift)
+        if spec.feasible and spec not in out:
+            out.append(spec)
+    return tuple(out)
 
 
 def overflow_free_region(lane_dtype=jnp.int16.dtype, n_pack: int = 2,

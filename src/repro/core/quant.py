@@ -34,6 +34,11 @@ class QuantConfig:
     a_method: str = "lsq"
     lane_dtype: str = "int16"   # packed lane for the inference kernel
     n_pack: int = 2
+    # Field stride override for the packed lane (None -> lane default).  The
+    # (lane_dtype, n_pack, pack_shift) triple names the *baseline* layout;
+    # the autotuner may still pick a faster member of packing.LAYOUT_FAMILY
+    # per layer (DESIGN.md §16).
+    pack_shift: int | None = None
     # KV cache storage precision: 0 = bf16; 8 = int8 + per-(pos, kv-head)
     # bf16 scales; 4 | 2 = bit-dense packed int32 words (pack_words along
     # head_dim) + the same scale granularity (DESIGN.md §13).

@@ -11,6 +11,15 @@ measurement pass over a *bounded* candidate grid:
   * ``tune_packed_matmul``   — block_m / block_n / chunks
   * ``tune_packed_conv2d``   — block_h / block_co
   * ``tune_attention_chunk`` — q-chunk of the fused-dequant attention loop
+  * ``tune_matmul_layout`` / ``tune_conv2d_layout`` — the PackSpec lane
+    layout itself (packing.LAYOUT_FAMILY), tiling each candidate via the
+    tuners above and verifying bit-exactness vs the unpacked reference
+
+Layout choices are keyed WITHOUT the row count (weights pack once offline
+and serve every batch size) and resolved by ``matmul_layout_for`` /
+``conv2d_layout_for`` — the one function packers, planners, and dispatch all
+call, so the layout the stored bytes use and the layout the kernel expects
+can never drift while one cache is active (DESIGN.md §16).
 
 Winners are persisted to a JSON tuning cache (``reports/autotune_<device>.
 json``; the CPU cache is committed so CI plans deterministically).  The
@@ -51,7 +60,11 @@ from repro.core.packing import PackSpec
 from repro.kernels import plan as plan_lib
 from repro.roofline import hw
 
-SCHEMA_VERSION = 1
+# Schema 2: PackSpec key strings grew an explicit shift suffix
+# ("W2A2/int16xP2s8") and the cache gained layout_* entries recording the
+# winning lane layout per shape.  Schema-1 files are ignored with a warning
+# and the planners fall back to heuristics (no migration needed — re-tune).
+SCHEMA_VERSION = 2
 
 #: Environment override for the cache file the active cache loads from.
 ENV_CACHE = "REPRO_AUTOTUNE_CACHE"
@@ -105,6 +118,26 @@ def attention_key(b: int, sq: int, skv: int, h: int, kvh: int, hd: int,
                   kv_bits: int) -> str:
     return (f"attention_chunk|b={b}|sq={sq}|skv={skv}|h={h}|kvh={kvh}"
             f"|hd={hd}|kv_bits={kv_bits}")
+
+
+def matmul_layout_key(k: int, n: int, w_bits: int, a_bits: int, *,
+                      backend: str, weight_store: str = "lanes") -> str:
+    """Lane-layout choice for a [*, k] x [k, n] weight.  Deliberately NOT
+    keyed on the row count: weights are packed once offline and serve every
+    batch size, so one layout must win across m."""
+    return (f"layout_matmul|{backend}|k={k}|n={n}|w={w_bits}|a={a_bits}"
+            f"|store={weight_store}")
+
+
+def conv2d_layout_key(x_shape: tuple, w_shape: tuple, w_bits: int,
+                      a_bits: int, *, padding: str, backend: str,
+                      weight_store: str = "lanes") -> str:
+    """Lane-layout choice for a conv2d; shapes are the UNPACKED
+    x [N, H, W, Cin] and w [Fh, Fw, Cin, Co] (layout-independent)."""
+    xs = "x".join(str(d) for d in x_shape)
+    ws = "x".join(str(d) for d in w_shape)
+    return (f"layout_conv2d|{backend}|x={xs}|w={ws}|pad={padding}"
+            f"|wb={w_bits}|ab={a_bits}|store={weight_store}")
 
 
 # ---------------------------------------------------------------------------
@@ -457,6 +490,208 @@ def tune_packed_conv2d(x_shape: tuple, w_shape: tuple, spec: PackSpec, *,
                    block_h=bh, block_co=bco)
     _store(cache, key, entry)
     return entry
+
+
+# ---------------------------------------------------------------------------
+# Lane-layout sweep: PackSpec as a tuning axis (FullPack-style selection)
+# ---------------------------------------------------------------------------
+
+def tune_matmul_layout(m: int, k: int, n: int, base_spec: PackSpec, *,
+                       backend: str = "auto", weight_store: str = "lanes",
+                       vmem_budget: int | None = None,
+                       cache: TuningCache | None = None,
+                       max_candidates: int = 16, repeats: int = 3,
+                       force: bool = False, seed: int = 0) -> dict:
+    """Sweep packing.LAYOUT_FAMILY for one [m, k] x [k, n] matmul.
+
+    Each candidate layout is tile-tuned via :func:`tune_packed_matmul` (so
+    the winning layout also lands with tuned tiles) and verified bit-exact
+    against the unpacked integer reference before it may win; a layout that
+    ever mismatched would silently corrupt every layer packed under it.
+    The winner is recorded under :func:`matmul_layout_key` — keyed on
+    (k, n), not m — and resolved by :func:`matmul_layout_for`.
+    """
+    from repro.kernels import ops, ref  # registers the backends
+
+    backend = plan_lib.resolve_backend(backend)
+    cache = cache if cache is not None else active_cache()
+    key = matmul_layout_key(k, n, base_spec.w_bits, base_spec.a_bits,
+                            backend=backend, weight_store=weight_store)
+    if not force:
+        hit = cache.lookup(key)
+        if hit is not None:
+            return hit
+
+    rng = np.random.default_rng(seed)
+    q_a = jnp.asarray(rng.integers(0, base_spec.max_a + 1, (m, k)),
+                      jnp.int32)
+    q_w = jnp.asarray(rng.integers(0, base_spec.max_w + 1, (k, n)),
+                      jnp.int32)
+    want = np.asarray(ref.matmul_i32_ref(q_a, q_w))
+
+    best, base_us, tried = None, None, 0
+    for spec in packing.layout_family(base_spec.w_bits, base_spec.a_bits,
+                                      base_spec):
+        kp = -(-k // spec.n_pack)
+        k_full = k if weight_store == "dense" else None
+        entry = tune_packed_matmul(
+            m, kp, n, spec, backend=backend, weight_store=weight_store,
+            k_full=k_full, vmem_budget=vmem_budget, cache=cache,
+            max_candidates=max_candidates, repeats=repeats, force=force,
+            seed=seed)
+        # Mandatory: the layout must reproduce the unpacked reference
+        # bit-for-bit through the tuned plan before it can be selected.
+        ap = packing.pack_activations(q_a, spec, axis=-1)
+        if weight_store == "dense":
+            wp = ops.dense_store_weights(q_w, spec.w_bits)
+        else:
+            wp = packing.pack_weights(q_w, spec, axis=0)
+        got = np.asarray(ops.packed_matmul(
+            ap, wp, spec, backend=backend, weight_store=weight_store,
+            k_full=k_full))
+        if not np.array_equal(got, want):
+            warnings.warn(f"layout candidate {spec} failed bit-exactness "
+                          f"at m={m} k={k} n={n}; excluded", stacklevel=2)
+            continue
+        tried += 1
+        us = float(entry["wall_us"])
+        if spec == base_spec:
+            base_us = us
+        if best is None or us < best[0]:
+            best = (us, spec)
+
+    us, spec = best
+    layout_entry = {"spec": str(spec), "wall_us": round(us, 2),
+                    "base_spec": str(base_spec),
+                    "base_us": (round(base_us, 2) if base_us is not None
+                                else None),
+                    "candidates": tried}
+    _store(cache, key, layout_entry)
+    return layout_entry
+
+
+def tune_conv2d_layout(x_shape: tuple, w_shape: tuple,
+                       base_spec: PackSpec, *, padding: str = "SAME",
+                       backend: str = "auto", weight_store: str = "lanes",
+                       vmem_budget: int | None = None,
+                       cache: TuningCache | None = None,
+                       max_candidates: int = 12, repeats: int = 3,
+                       force: bool = False, seed: int = 0) -> dict:
+    """Layout sweep for one conv2d; ``x_shape``/``w_shape`` are the UNPACKED
+    x [N, H, W, Cin] and w [Fh, Fw, Cin, Co] (see tune_matmul_layout)."""
+    from repro.kernels import ops, ref
+
+    backend = plan_lib.resolve_backend(backend)
+    cache = cache if cache is not None else active_cache()
+    nb, h, w, cin = x_shape
+    fh, fw, _, co = w_shape
+    key = conv2d_layout_key(tuple(x_shape), tuple(w_shape),
+                            base_spec.w_bits, base_spec.a_bits,
+                            padding=padding, backend=backend,
+                            weight_store=weight_store)
+    if not force:
+        hit = cache.lookup(key)
+        if hit is not None:
+            return hit
+
+    rng = np.random.default_rng(seed)
+    q_x = jnp.asarray(rng.integers(0, base_spec.max_a + 1, (nb, h, w, cin)),
+                      jnp.int32)
+    q_w = jnp.asarray(rng.integers(0, base_spec.max_w + 1,
+                                   (fh, fw, cin, co)), jnp.int32)
+    want = np.asarray(ref.conv2d_i32_ref(q_x, q_w, padding=padding))
+
+    best, base_us, tried = None, None, 0
+    for spec in packing.layout_family(base_spec.w_bits, base_spec.a_bits,
+                                      base_spec):
+        cp = -(-cin // spec.n_pack)
+        if weight_store == "dense":
+            cdim = -(-cin // (32 // spec.w_bits))
+            k_full = cin
+        else:
+            cdim, k_full = cp, None
+        entry = tune_packed_conv2d(
+            (nb, h, w, cp), (fh, fw, cdim, co), spec, padding=padding,
+            backend=backend, weight_store=weight_store, k_full=k_full,
+            vmem_budget=vmem_budget, cache=cache,
+            max_candidates=max_candidates, repeats=repeats, force=force,
+            seed=seed)
+        xp = packing.pack_activations(q_x, spec, axis=-1)
+        if weight_store == "dense":
+            wp = ops.dense_store_conv_weights(q_w, spec.w_bits)
+        else:
+            wp = packing.pack_weights(q_w, spec, axis=2)
+        got = np.asarray(ops.packed_conv2d(
+            xp, wp, spec, padding=padding, backend=backend,
+            weight_store=weight_store, k_full=k_full))
+        if not np.array_equal(got, want):
+            warnings.warn(f"layout candidate {spec} failed bit-exactness "
+                          f"at x={x_shape} w={w_shape}; excluded",
+                          stacklevel=2)
+            continue
+        tried += 1
+        us = float(entry["wall_us"])
+        if spec == base_spec:
+            base_us = us
+        if best is None or us < best[0]:
+            best = (us, spec)
+
+    us, spec = best
+    layout_entry = {"spec": str(spec), "wall_us": round(us, 2),
+                    "base_spec": str(base_spec),
+                    "base_us": (round(base_us, 2) if base_us is not None
+                                else None),
+                    "candidates": tried}
+    _store(cache, key, layout_entry)
+    return layout_entry
+
+
+def _layout_from_entry(entry: dict | None, w_bits: int,
+                       a_bits: int) -> PackSpec | None:
+    """Decode + sanity-check a layout entry; None on any mismatch (the
+    caller then falls back to the config-derived spec)."""
+    if not isinstance(entry, dict) or not isinstance(entry.get("spec"), str):
+        return None
+    try:
+        spec = PackSpec.parse(entry["spec"])
+    except ValueError:
+        return None
+    if spec.w_bits != w_bits or spec.a_bits != a_bits or not spec.feasible:
+        return None
+    return spec
+
+
+def matmul_layout_for(k: int, n: int, base_spec: PackSpec, *,
+                      backend: str = "auto",
+                      weight_store: str = "lanes") -> PackSpec:
+    """The per-layer *chosen* lane layout for a [*, k] x [k, n] weight.
+
+    Packers (serve/prepare, models/common), planners (serve layer plans) and
+    dispatch (dense_apply) all resolve through here against the active
+    cache, defaulting to the config-derived ``base_spec`` on miss — an empty
+    cache reproduces the fixed-layout behavior exactly.
+    """
+    backend = plan_lib.resolve_backend(backend)
+    entry = lookup(matmul_layout_key(k, n, base_spec.w_bits,
+                                     base_spec.a_bits, backend=backend,
+                                     weight_store=weight_store))
+    return _layout_from_entry(entry, base_spec.w_bits,
+                              base_spec.a_bits) or base_spec
+
+
+def conv2d_layout_for(x_shape: tuple, w_shape: tuple,
+                      base_spec: PackSpec, *, padding: str = "SAME",
+                      backend: str = "auto",
+                      weight_store: str = "lanes") -> PackSpec:
+    """Chosen lane layout for a conv2d (unpacked shapes; see
+    matmul_layout_for)."""
+    backend = plan_lib.resolve_backend(backend)
+    entry = lookup(conv2d_layout_key(tuple(x_shape), tuple(w_shape),
+                                     base_spec.w_bits, base_spec.a_bits,
+                                     padding=padding, backend=backend,
+                                     weight_store=weight_store))
+    return _layout_from_entry(entry, base_spec.w_bits,
+                              base_spec.a_bits) or base_spec
 
 
 def tune_attention_chunk(b: int, sq: int, skv: int, h: int, kvh: int,

@@ -230,6 +230,7 @@ def plan_packed_matmul(m: int, kp: int, n: int, spec: PackSpec, *,
     128, chunks=8) are kept when they fit; otherwise chunks shrinks first
     (it only amortizes grid overhead), then bn, then bm.
     """
+    spec.validate()   # beyond-bound layouts are rejected here, not in-kernel
     backend = resolve_backend(backend)
     if weight_store == "dense" and k_full is None:
         k_full = kp * spec.n_pack
@@ -288,6 +289,7 @@ def plan_packed_conv2d(x_shape: tuple, w_shape: tuple, spec: PackSpec, *,
     budget, so VMEM use is bounded by the tile rather than the image and
     large resolutions stay feasible (DESIGN.md §10).
     """
+    spec.validate()   # beyond-bound layouts are rejected here, not in-kernel
     backend = resolve_backend(backend)
     _, h, w, cp = x_shape
     fh, fw, cdim, co = w_shape

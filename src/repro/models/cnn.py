@@ -40,15 +40,43 @@ def conv_init(key, fh, fw, cin, cout, qcfg, dtype=jnp.float32):
     return p
 
 
-def conv_prepare(p, qcfg, *, weight_store: str = "lanes"):
+def conv_layer_spec(x_shape, w_shape, qcfg, *, padding: str = "SAME",
+                    weight_store: str = "lanes", w_packed=None) -> PackSpec:
+    """Per-layer chosen lane layout for a conv2d (DESIGN.md §16).
+
+    ``x_shape``/``w_shape`` are the UNPACKED [N, H, W, Cin] / [Fh, Fw, Cin,
+    Co].  Resolves through the active autotune layout cache
+    (autotune.conv2d_layout_for), defaulting to the config spec; a lanes
+    leaf (``w_packed``) whose dtype/channel count contradicts the resolved
+    layout (cache changed after packing) falls back to the config spec.
+    """
+    from repro.kernels import autotune
+
+    base = PackSpec.from_config(qcfg)
+    spec = autotune.conv2d_layout_for(tuple(x_shape), tuple(w_shape), base,
+                                      padding=padding, backend="auto",
+                                      weight_store=weight_store)
+    if weight_store == "lanes" and w_packed is not None and spec != base:
+        cin = w_shape[2]
+        if (w_packed.dtype != spec.lane_dtype
+                or w_packed.shape[2] != -(-cin // spec.n_pack)):
+            return base
+    return spec
+
+
+def conv_prepare(p, qcfg, *, weight_store: str = "lanes",
+                 spec: PackSpec | None = None):
     """Offline per-layer weight preparation (done once, not per forward).
 
     Quantizes the float kernel to the w_bits lattice and stores it either as
     P1 lanes ('lanes' -> ``w_packed``) or bit-dense int32 words ('dense' ->
     ``w_words``, expanded in the conv kernel prologue).  The float kernel is
-    dropped from the prepared layer.
+    dropped from the prepared layer.  ``spec`` pins the lane layout (the
+    per-layer chosen spec from ``conv_layer_spec`` — preparation happens
+    once offline, so the layout decision is made by the caller who knows
+    the input shape); defaults to the config-global spec.
     """
-    spec = PackSpec.from_config(qcfg)
+    spec = spec if spec is not None else PackSpec.from_config(qcfg)
     w = p["kernel"].astype(jnp.float32)
     w_scale = p.get("w_step", quant.calibrate_absmax(w, qcfg.w_bits)[0])
     w_zp = qcfg.w_zero_point
@@ -65,12 +93,39 @@ def conv_prepare(p, qcfg, *, weight_store: str = "lanes"):
     return out
 
 
-def prepare_packed_params(params, cfg, *, weight_store: str = "lanes"):
+def prepare_packed_params(params, cfg, *, weight_store: str = "lanes",
+                          x_shape=None, padding: str = "SAME",
+                          autotune: bool = False):
     """Convert a trained/QAT param tree for packed serving (weights packed
-    once); the float stem and head are untouched (they run un-quantized)."""
-    return {"stem": params["stem"],
-            "layers": [conv_prepare(p, cfg.quant, weight_store=weight_store)
-                       for p in params["layers"]],
+    once); the float stem and head are untouched (they run un-quantized).
+
+    With ``x_shape`` ([N, H, W, 3] network input) each layer packs under its
+    per-layer *chosen* lane layout (``conv_layer_spec``; SAME padding keeps
+    H, W constant through the stack); ``autotune=True`` additionally sweeps
+    the layout family per layer first (autotune.tune_conv2d_layout) — the
+    tuner weighs layouts *before* the bytes are packed.  Without ``x_shape``
+    every layer uses the config-global spec (pre-layout-sweep behavior).
+    """
+    chans = cfg.cnn_channels
+    layers = []
+    for i, p in enumerate(params["layers"]):
+        spec = None
+        if x_shape is not None:
+            n, h, w, _ = x_shape
+            cin = chans[i - 1] if i > 0 else chans[0]
+            cout = chans[i]
+            fh = fw = cfg.cnn_kernel
+            xs, ws = (n, h, w, cin), (fh, fw, cin, cout)
+            if autotune:
+                from repro.kernels import autotune as autotune_lib
+                autotune_lib.tune_conv2d_layout(
+                    xs, ws, PackSpec.from_config(cfg.quant),
+                    padding=padding, weight_store=weight_store)
+            spec = conv_layer_spec(xs, ws, cfg.quant, padding=padding,
+                                   weight_store=weight_store)
+        layers.append(conv_prepare(p, cfg.quant, weight_store=weight_store,
+                                   spec=spec))
+    return {"stem": params["stem"], "layers": layers,
             "head": params["head"]}
 
 
@@ -89,25 +144,48 @@ def layer_plans(params, cfg, x_shape, *, padding: str = "SAME",
     (``autotune.active_cache().save()``) to tune a deployment once offline.
     """
     n, h, w, _ = x_shape
-    spec = PackSpec.from_config(cfg.quant)
     chans = cfg.cnn_channels
     plans = []
     for i, p in enumerate(params["layers"]):
         cin = chans[i - 1] if i > 0 else chans[0]
+        cout = chans[i]
+        fh = fw = cfg.cnn_kernel
+        # Per-layer chosen lane layout, resolved exactly as pack time did
+        # (conv_layer_spec: active layout cache, config default, leaf
+        # evidence guard) — the plan records which layout the stored bytes
+        # use (DESIGN.md §16).
         if "w_packed" in p:
-            w_shape = tuple(p["w_packed"].shape)
+            wp = p["w_packed"]
+            fh, fw, cout = int(wp.shape[0]), int(wp.shape[1]), int(wp.shape[3])
             store, k_full = "lanes", None
-            cp = w_shape[2]
+            spec = conv_layer_spec((n, h, w, cin), (fh, fw, cin, cout),
+                                   cfg.quant, padding=padding,
+                                   weight_store=store, w_packed=wp)
+            cp = int(wp.shape[2])
+            if wp.dtype != spec.lane_dtype or cp != -(-cin // spec.n_pack):
+                raise ValueError(
+                    f"layers[{i}]: packed bytes ({wp.dtype}, cp={cp}) do "
+                    f"not match the resolved lane layout {spec} for "
+                    f"cin={cin}; re-run prepare_packed_params under the "
+                    f"active autotune layout cache")
+            w_shape = tuple(wp.shape)
         elif "w_words" in p:
-            w_shape = tuple(p["w_words"].shape)
-            store = "dense"
-            k_full = cin
-            cp = -(-k_full // spec.n_pack)
+            ww = p["w_words"]
+            fh, fw, cout = int(ww.shape[0]), int(ww.shape[1]), int(ww.shape[3])
+            store, k_full = "dense", cin
+            spec = conv_layer_spec((n, h, w, cin), (fh, fw, cin, cout),
+                                   cfg.quant, padding=padding,
+                                   weight_store=store)
+            cp = -(-cin // spec.n_pack)
+            w_shape = tuple(ww.shape)
         else:
-            w_shape = tuple(p["kernel"].shape)
-            cp = -(-w_shape[2] // spec.n_pack)
-            w_shape = w_shape[:2] + (cp,) + w_shape[3:]
+            fh, fw, cin, cout = (int(d) for d in p["kernel"].shape)
             store, k_full = "lanes", None
+            spec = conv_layer_spec((n, h, w, cin), (fh, fw, cin, cout),
+                                   cfg.quant, padding=padding,
+                                   weight_store=store)
+            cp = -(-cin // spec.n_pack)
+            w_shape = (fh, fw, cp, cout)
         if autotune:
             from repro.kernels import autotune as autotune_lib
             autotune_lib.tune_packed_conv2d(
@@ -122,8 +200,23 @@ def layer_plans(params, cfg, x_shape, *, padding: str = "SAME",
 def conv_apply(p, x, qcfg, *, quant_mode="none", padding="SAME",
                backend="auto", plan=None):
     if quant_mode == "packed" and qcfg.enabled:
-        spec = PackSpec.from_config(qcfg)
         prepared = "w_packed" in p or "w_words" in p
+        if plan is not None:
+            # the plan records which lane layout the stored bytes use
+            spec = plan.spec
+        else:
+            xs = tuple(int(d) for d in x.shape)
+            if prepared:
+                wp0 = p.get("w_packed", p.get("w_words"))
+                ws = (int(wp0.shape[0]), int(wp0.shape[1]), xs[-1],
+                      int(wp0.shape[3]))
+                spec = conv_layer_spec(
+                    xs, ws, qcfg, padding=padding,
+                    weight_store="dense" if "w_words" in p else "lanes",
+                    w_packed=p.get("w_packed"))
+            else:
+                spec = conv_layer_spec(xs, tuple(p["kernel"].shape), qcfg,
+                                       padding=padding)
         if prepared:
             w_scale, w_zp = p["w_scale"], p["w_zp"]
             wp = p.get("w_packed", p.get("w_words"))

@@ -44,16 +44,46 @@ def dense_init(key, d_in, d_out, *, use_bias=False, dtype=jnp.float32,
     return p
 
 
+def dense_layer_spec(k: int, n: int, qcfg: QuantConfig, *,
+                     weight_store: str = "lanes",
+                     w_packed=None) -> PackSpec:
+    """The per-layer *chosen* lane layout for a [k, n] Dense (DESIGN.md §16).
+
+    Resolves through the active autotune layout cache (autotune.
+    matmul_layout_for), defaulting to the config-global spec on a miss, so
+    pack time, plan time and dispatch time all agree on one layout.  With
+    the lanes store the packed leaf (``w_packed``) is evidence of the layout
+    the stored bytes actually use: if the cache changed since pack time and
+    the chosen layout no longer matches the leaf's dtype/shape, fall back to
+    the config spec rather than misread the bytes.  (Bit-dense words are
+    layout-agnostic at rest, so the dense store never needs this guard.)
+    """
+    from repro.kernels import autotune
+
+    base = PackSpec.from_config(qcfg)
+    spec = autotune.matmul_layout_for(k, n, base, backend="auto",
+                                      weight_store=weight_store)
+    if weight_store == "lanes" and w_packed is not None and spec != base:
+        if (w_packed.dtype != spec.lane_dtype
+                or w_packed.shape[0] != -(-k // spec.n_pack)):
+            return base
+    return spec
+
+
 def dense_apply(p, x, *, qcfg: QuantConfig | None = None,
                 quant_mode: str = "none", compute_dtype=jnp.bfloat16):
     """y = x @ kernel (+ bias), under the selected quantization mode."""
     quantized = qcfg is not None and qcfg.enabled and "w_step" in p \
         or (qcfg is not None and qcfg.enabled and "w_packed" in p)
     if quant_mode == "packed" and ("w_packed" in p or "w_dense" in p):
-        spec = PackSpec.from_config(qcfg)
         dense = "w_dense" in p
+        w = p["w_dense"] if dense else p["w_packed"]
+        spec = dense_layer_spec(
+            int(x.shape[-1]), int(w.shape[-1]), qcfg,
+            weight_store="dense" if dense else "lanes",
+            w_packed=None if dense else w)
         return ops.quantized_linear(
-            x.astype(jnp.float32), p["w_dense"] if dense else p["w_packed"],
+            x.astype(jnp.float32), w,
             p["col_sums"], p["a_scale"], p["a_zp"], p["w_scale"], p["w_zp"],
             spec, bias=p.get("bias"), backend="auto",
             weight_store="dense" if dense else "lanes",
@@ -75,32 +105,40 @@ def dense_apply(p, x, *, qcfg: QuantConfig | None = None,
     return y
 
 
-def pack_dense_params(p, qcfg: QuantConfig, *, dense_store: bool = False):
+def pack_dense_params(p, qcfg: QuantConfig, *, dense_store: bool = False,
+                      spec: PackSpec | None = None):
     """Offline conversion QAT/float Dense params -> deployed packed params.
 
     ``dense_store=True`` keeps the weight bit-dense (int32 words, true
     w_bits/value HBM footprint; key ``w_dense``) instead of as P1 lanes —
     the decode memory-bound path; lanes are recovered at use.
+
+    The lane layout is the per-layer chosen spec (``dense_layer_spec``:
+    active layout cache, config default on miss) unless pinned via ``spec``
+    — weights pack once offline, so the layout decision happens here and
+    dispatch resolves the same choice.
     """
-    spec = PackSpec.from_config(qcfg)
     kernel = p["kernel"].astype(jnp.float32)
+    store = "dense" if dense_store else "lanes"
+    if spec is None:
+        spec = dense_layer_spec(int(kernel.shape[0]), int(kernel.shape[1]),
+                                qcfg, weight_store=store)
     w_scale = p.get("w_step")
     if w_scale is None:
         w_scale, _ = quant.calibrate_absmax(kernel, qcfg.w_bits)
     w_zp = jnp.int32(qcfg.w_zero_point)
-    store = "dense" if dense_store else "lanes"
     w_packed, col_sums = ops.prepare_weights(kernel, w_scale, w_zp, spec,
                                              weight_store=store)
     a_scale = p.get("a_step", jnp.float32(1.0 / np.sqrt(qcfg.qmax_a)))
     a_zp = jnp.int32((qcfg.qmax_a + 1) // 2)
+    # Packing rounds K up (words and lanes both); record the exact K so
+    # offline plan building and layout resolution key the same (k, n) the
+    # dispatch path derives from x.shape.
     out = {"w_dense" if dense_store else "w_packed": w_packed,
            "col_sums": col_sums,
            "w_scale": jnp.asarray(w_scale, jnp.float32), "w_zp": w_zp,
-           "a_scale": jnp.asarray(a_scale, jnp.float32), "a_zp": a_zp}
-    if dense_store:
-        # word packing rounds K up; record the exact K so offline plan
-        # building keys the same plan the dispatch path builds from x.shape
-        out["k_full"] = int(kernel.shape[0])
+           "a_scale": jnp.asarray(a_scale, jnp.float32), "a_zp": a_zp,
+           "k_full": int(kernel.shape[0])}
     if "bias" in p:
         out["bias"] = p["bias"]
     return out

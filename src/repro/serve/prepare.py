@@ -33,13 +33,28 @@ def _is_packed(node) -> bool:
     return isinstance(node, dict) and ("w_packed" in node or "w_dense" in node)
 
 
-def prepare_serving_params(params, cfg, *, dense_store: bool = False):
-    """Recursively pack all quantizable Dense leaves."""
+def prepare_serving_params(params, cfg, *, dense_store: bool = False,
+                           autotune: bool = False, tune_rows: int = 8):
+    """Recursively pack all quantizable Dense leaves.
+
+    ``autotune=True`` sweeps the lane-layout family per distinct (k, n)
+    *before* packing (autotune.tune_matmul_layout at ``tune_rows`` rows) —
+    weights pack once offline, so the layout decision must be weighed here;
+    pack_dense_params then resolves each layer's chosen spec from the same
+    cache, and build_layer_plans / dispatch resolve identically later.
+    """
     if not cfg.quant.enabled:
         return params
+    store = "dense" if dense_store else "lanes"
 
     def walk(node):
         if _is_packable(node):
+            if autotune:
+                from repro.kernels import autotune as autotune_lib
+                k, n = node["kernel"].shape
+                autotune_lib.tune_matmul_layout(
+                    tune_rows, int(k), int(n),
+                    PackSpec.from_config(cfg.quant), weight_store=store)
             return common.pack_dense_params(node, cfg.quant,
                                             dense_store=dense_store)
         if isinstance(node, dict):
@@ -88,10 +103,10 @@ def build_layer_plans(params, cfg, *, batch_rows: int = 1,
     """
     if not cfg.quant.enabled:
         return {}
-    spec = PackSpec.from_config(cfg.quant)
+    base = PackSpec.from_config(cfg.quant)
     plans = {}
 
-    def plan_rows(rows, kp, n, dense, k_full):
+    def plan_rows(rows, kp, n, dense, k_full, spec):
         store = "dense" if dense else "lanes"
         if autotune:
             from repro.kernels import autotune as autotune_lib
@@ -106,28 +121,47 @@ def build_layer_plans(params, cfg, *, batch_rows: int = 1,
         if _is_packed(node):
             dense = "w_dense" in node
             w = node["w_dense"] if dense else node["w_packed"]
-            n_global = w.shape[-1]
+            n_global = int(w.shape[-1])
             n = shard_plan.local_out(n_global) if shard_plan is not None \
                 else n_global
+            # Per-layer chosen lane layout (DESIGN.md §16): resolve exactly
+            # as pack time and dispatch time do — layout keys use the
+            # logical (k, GLOBAL n); ``k_full`` is recorded in every packed
+            # node so odd K resolves unambiguously.
             if dense:
-                per = 32 // spec.w_bits
-                k_full = int(node.get("k_full", w.shape[0] * per))
-                kp = -(-k_full // spec.n_pack)
+                per = 32 // base.w_bits
+                k = int(node.get("k_full", w.shape[0] * per))
             else:
-                k_full, kp = None, w.shape[0]
-            plans[path] = plan_rows(batch_rows, kp, n, dense, k_full)
+                k = int(node.get("k_full", w.shape[0] * base.n_pack))
+            spec = common.dense_layer_spec(
+                k, n_global, cfg.quant,
+                weight_store="dense" if dense else "lanes",
+                w_packed=None if dense else w)
+            if dense:
+                k_full, kp = k, -(-k // spec.n_pack)
+            else:
+                k_full, kp = None, int(w.shape[0])
+                if (w.dtype != spec.lane_dtype
+                        or w.shape[0] != -(-k // spec.n_pack)):
+                    raise ValueError(
+                        f"{path}: packed bytes ({w.dtype}, kp={w.shape[0]}) "
+                        f"do not match the resolved lane layout {spec} for "
+                        f"k={k}, n={n_global}; the tree was packed under a "
+                        f"different autotune layout cache — re-run "
+                        f"prepare_serving_params under the active cache")
+            plans[path] = plan_rows(batch_rows, kp, n, dense, k_full, spec)
             if prefill_rows and prefill_rows != batch_rows:
                 plans[f"{path}@prefill"] = plan_rows(prefill_rows, kp, n,
-                                                     dense, k_full)
+                                                     dense, k_full, spec)
             if n != n_global:
                 # GSPMD dispatch signatures (see docstring): the jitted
                 # steps re-plan from global trace-time shapes, so memoize
                 # + warm-tune those too
-                plans[f"{path}@global"] = plan_rows(batch_rows, kp,
-                                                    n_global, dense, k_full)
+                plans[f"{path}@global"] = plan_rows(
+                    batch_rows, kp, n_global, dense, k_full, spec)
                 if prefill_rows and prefill_rows != batch_rows:
                     plans[f"{path}@global@prefill"] = plan_rows(
-                        prefill_rows, kp, n_global, dense, k_full)
+                        prefill_rows, kp, n_global, dense, k_full, spec)
             return
         if isinstance(node, dict):
             for k, v in node.items():

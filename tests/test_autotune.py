@@ -195,6 +195,135 @@ class TestTuners:
         assert after.source == "tuned"
 
 
+class TestLayoutTuner:
+    """Lane-layout sweep (DESIGN.md §16): the tuner stores a verified
+    winner, resolution defaults to the config spec on miss/mismatch, and a
+    pinned non-default winner flows pack -> plan -> dispatch bit-exactly."""
+
+    def test_tune_matmul_layout_stores_verified_winner(self):
+        cache = _empty()
+        entry = autotune.tune_matmul_layout(4, 40, 16, SPEC, backend="xla",
+                                            repeats=1, max_candidates=3)
+        for field in ("spec", "wall_us", "base_spec", "base_us",
+                      "candidates"):
+            assert field in entry, field
+        assert entry["base_spec"] == str(SPEC)
+        assert entry["candidates"] >= 2      # family swept, not just base
+        chosen = PackSpec.parse(entry["spec"])
+        assert chosen.feasible
+        key = autotune.matmul_layout_key(40, 16, 2, 2, backend="xla")
+        assert cache.lookup(key) is entry
+        # resolution returns the stored winner; re-tune is a cache hit
+        assert autotune.matmul_layout_for(40, 16, SPEC,
+                                          backend="xla") == chosen
+        assert autotune.tune_matmul_layout(4, 40, 16, SPEC,
+                                           backend="xla") is entry
+
+    def test_tune_conv2d_layout_stores_verified_winner(self):
+        cache = _empty()
+        entry = autotune.tune_conv2d_layout(
+            (1, 10, 10, 4), (3, 3, 4, 8), SPEC, padding="VALID",
+            backend="xla", repeats=1, max_candidates=3)
+        chosen = PackSpec.parse(entry["spec"])
+        assert chosen.feasible
+        key = autotune.conv2d_layout_key((1, 10, 10, 4), (3, 3, 4, 8), 2, 2,
+                                         padding="VALID", backend="xla")
+        assert cache.lookup(key) is entry
+        assert autotune.conv2d_layout_for(
+            (1, 10, 10, 4), (3, 3, 4, 8), SPEC, padding="VALID",
+            backend="xla") == chosen
+
+    def test_layout_for_defaults_to_base_on_miss(self):
+        _empty()
+        assert autotune.matmul_layout_for(40, 16, SPEC,
+                                          backend="xla") == SPEC
+        assert autotune.conv2d_layout_for(
+            (1, 8, 8, 4), (3, 3, 4, 8), SPEC, padding="VALID",
+            backend="xla") == SPEC
+
+    def test_layout_for_ignores_unusable_entries(self):
+        cache = _empty()
+        key = autotune.matmul_layout_key(40, 16, 2, 2, backend="xla")
+        for bad in ({"spec": "W4A4/int16xP2s8"},   # wrong bits + infeasible
+                    {"spec": "garbage"},
+                    {"wall_us": 3.0}):
+            cache.store(key, bad)
+            assert autotune.matmul_layout_for(40, 16, SPEC,
+                                              backend="xla") == SPEC
+
+    def test_layout_key_excludes_rows(self):
+        # Weights pack once and serve every batch size: the layout choice
+        # may not depend on m.
+        k1 = autotune.matmul_layout_key(40, 16, 2, 2, backend="xla")
+        assert "m=" not in k1 and "k=40" in k1 and "n=16" in k1
+
+    def test_chosen_layout_flows_pack_plan_dispatch(self):
+        """Pin a non-default winner; pack_dense_params packs under it,
+        build_layer_plans plans under it, dense_apply dispatches under it —
+        bit-exact against the float reference path's quantized result."""
+        from repro.core.quant import QuantConfig
+        from repro.models import common
+        from repro.serve import prepare
+
+        cache = _empty()
+        qcfg = QuantConfig(enabled=True, w_bits=2, a_bits=2)
+        k, n = 32, 16
+        wide = PackSpec(2, 2, jnp.int32.dtype, shift=16)
+        backend = plan_lib.resolve_backend("auto")
+        cache.store(autotune.matmul_layout_key(k, n, 2, 2, backend=backend),
+                    {"spec": str(wide)})
+
+        rng = np.random.default_rng(7)
+        p = {"kernel": jnp.asarray(rng.normal(size=(k, n)) * 0.1,
+                                   jnp.float32)}
+        packed = common.pack_dense_params(p, qcfg)
+        assert packed["w_packed"].dtype == wide.lane_dtype
+        assert packed["w_packed"].shape[0] == -(-k // wide.n_pack)
+
+        class Cfg:
+            quant = qcfg
+        plans = prepare.build_layer_plans({"mlp": packed}, Cfg(),
+                                          batch_rows=4)
+        assert plans["mlp"].spec == wide
+
+        x = jnp.asarray(rng.normal(size=(4, k)), jnp.float32)
+        y = common.dense_apply(packed, x, qcfg=qcfg, quant_mode="packed",
+                               compute_dtype=jnp.float32)
+        # same quantized result as packing under the config default
+        base_packed = common.pack_dense_params(p, qcfg, spec=SPEC)
+        y_base = common.dense_apply(base_packed, x, qcfg=qcfg,
+                                    quant_mode="packed",
+                                    compute_dtype=jnp.float32)
+        assert base_packed["w_packed"].dtype == SPEC.lane_dtype
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_base),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_stale_layout_cache_falls_back_on_packed_evidence(self):
+        """Bytes packed under the default, cache later says int32/s16: the
+        packed leaf contradicts the resolved layout, so dispatch falls back
+        to the layout the bytes actually use instead of misreading them."""
+        from repro.core.quant import QuantConfig
+        from repro.models import common
+
+        cache = _empty()
+        qcfg = QuantConfig(enabled=True, w_bits=2, a_bits=2)
+        k, n = 32, 16
+        rng = np.random.default_rng(3)
+        p = {"kernel": jnp.asarray(rng.normal(size=(k, n)) * 0.1,
+                                   jnp.float32)}
+        packed = common.pack_dense_params(p, qcfg)   # default layout
+        backend = plan_lib.resolve_backend("auto")
+        cache.store(autotune.matmul_layout_key(k, n, 2, 2, backend=backend),
+                    {"spec": str(PackSpec(2, 2, jnp.int32.dtype, shift=16))})
+        spec = common.dense_layer_spec(k, n, qcfg,
+                                       w_packed=packed["w_packed"])
+        assert spec == SPEC
+        x = jnp.asarray(rng.normal(size=(2, k)), jnp.float32)
+        y = common.dense_apply(packed, x, qcfg=qcfg, quant_mode="packed",
+                               compute_dtype=jnp.float32)
+        assert np.isfinite(np.asarray(y)).all()
+
+
 class TestMeasure:
     def test_median_of_repeats_scales_batch_to_min_time(self):
         calls = []

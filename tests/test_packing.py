@@ -174,6 +174,140 @@ class TestPackWords:
             packing.unpack_words(q, 33, 8)
 
 
+class TestLayoutFamily:
+    """The autotuned lane-layout family (DESIGN.md §16): validity filtering,
+    bit-exactness of every candidate, bound tightness, planner rejection."""
+
+    def test_family_is_feasibility_filtered(self):
+        for w in range(1, 5):
+            for a in range(1, 5):
+                fam = packing.layout_family(w, a)
+                # int32/s16 keeps every (w, a) <= 4 pair feasible — W4A4
+                # has no int16 layout but is NOT layout-starved.
+                assert fam, (w, a)
+                for spec in fam:
+                    assert (spec.w_bits, spec.a_bits) == (w, a)
+                    assert spec.feasible and spec.k_tile >= 1, str(spec)
+                    lane, n, s = (np.dtype(spec.lane_dtype).name,
+                                  spec.n_pack, spec.shift)
+                    assert (lane, n, s) in packing.LAYOUT_FAMILY, str(spec)
+
+    def test_base_spec_listed_first(self):
+        base = PackSpec(2, 2, jnp.int16.dtype)
+        assert packing.layout_family(2, 2, base)[0] == base
+
+    def test_wide_fields_extend_the_region(self):
+        # W4A4: infeasible on int16 (the paper's N+M<=7 wall) but feasible
+        # on int32 s16 fields — the layout axis widens the Fig. 5 region.
+        assert not PackSpec(4, 4, jnp.int16.dtype).feasible
+        wide = PackSpec(4, 4, jnp.int32.dtype, shift=16)
+        assert wide.feasible
+        assert wide in packing.layout_family(4, 4)
+        # and s16 fields multiply the accumulation run length: 3640 lanes
+        # between extractions vs the int16 default's 14 at W2A2
+        assert PackSpec(2, 2, jnp.int32.dtype, shift=16).k_tile \
+            > 100 * PackSpec(2, 2, jnp.int16.dtype).k_tile
+
+    @pytest.mark.parametrize("bits", [1, 2, 3, 4])
+    @pytest.mark.parametrize("k", [8, 13])        # even K and odd-tail K
+    def test_family_bit_exact_deterministic(self, bits, k):
+        from repro.kernels import ref
+        rng = np.random.default_rng(bits * 101 + k)
+        q_a = lattice(rng, (3, k), bits)
+        q_w = lattice(rng, (k, 5), bits)
+        want = np.asarray(ref.matmul_i32_ref(q_a, q_w))
+        for spec in packing.layout_family(bits, bits):
+            got = packing.packed_matmul_reference(q_a, q_w, spec)
+            np.testing.assert_array_equal(np.asarray(got), want,
+                                          err_msg=str(spec))
+
+    @given(st.integers(1, 4), st.integers(1, 4), st.integers(1, 70),
+           st.integers(1, 6))
+    @settings(max_examples=40, deadline=None)
+    def test_family_bit_exact_property(self, w_bits, a_bits, k, n):
+        """Every feasible family layout reproduces the unpacked int32
+        reference for every (w, a) <= 4 and every K tail parity."""
+        from repro.kernels import ref
+        rng = np.random.default_rng(w_bits * 1009 + a_bits * 97 + k * 5 + n)
+        q_a = lattice(rng, (3, k), a_bits)
+        q_w = lattice(rng, (k, n), w_bits)
+        want = np.asarray(ref.matmul_i32_ref(q_a, q_w))
+        for spec in packing.layout_family(w_bits, a_bits):
+            got = packing.packed_matmul_reference(q_a, q_w, spec)
+            np.testing.assert_array_equal(np.asarray(got), want,
+                                          err_msg=str(spec))
+
+    @pytest.mark.parametrize("w_bits,a_bits", [(1, 1), (2, 2), (3, 3),
+                                               (4, 4), (2, 4)])
+    def test_at_bound_exact_across_family(self, w_bits, a_bits):
+        """Accumulating exactly k_tile worst-case lanes still extracts D —
+        for int32/s16 this exercises the relaxed mod-2^32 wrap argument
+        (bands above D wrap harmlessly; DESIGN.md §16)."""
+        for spec in packing.layout_family(w_bits, a_bits):
+            k = spec.n_pack * spec.k_tile
+            q_a = jnp.full((1, k), spec.max_a, jnp.int32)
+            q_w = jnp.full((k, 1), spec.max_w, jnp.int32)
+            ap = packing.pack_activations(q_a, spec, -1)
+            wp = packing.pack_weights(q_w, spec, 0)
+            total = jnp.sum(ap.astype(jnp.int32)[0]
+                            * wp.astype(jnp.int32)[:, 0])
+            d = packing.extract_dot(total, spec)
+            assert int(d) == k * spec.max_a * spec.max_w, str(spec)
+
+    def test_beyond_bound_corrupts_wide_field(self):
+        # Bound tightness holds for the new int32 s16 layout too: one extra
+        # worst-case lane overflows D into the H band.
+        spec = PackSpec(2, 2, jnp.int32.dtype, shift=16)
+        k = 2 * (spec.k_tile + 1)
+        q_a = jnp.full((1, k), spec.max_a, jnp.int32)
+        q_w = jnp.full((k, 1), spec.max_w, jnp.int32)
+        ap = packing.pack_activations(q_a, spec, -1)
+        wp = packing.pack_weights(q_w, spec, 0)
+        total = jnp.sum(ap.astype(jnp.int32)[0] * wp.astype(jnp.int32)[:, 0])
+        assert int(packing.extract_dot(total, spec)) \
+            != k * spec.max_a * spec.max_w
+
+    def test_beyond_bound_rejected_by_planner(self):
+        """A layout past the overflow bound never reaches a kernel: the
+        planners reject it at plan time with the feasible alternatives."""
+        from repro.kernels import plan as plan_lib
+        spec = PackSpec(4, 4, jnp.int16.dtype)    # constructible, k_tile 0
+        assert spec.k_tile == 0
+        with pytest.raises(ValueError, match="overflow-free"):
+            plan_lib.plan_packed_matmul(8, 16, 32, spec, backend="xla")
+        with pytest.raises(ValueError, match="overflow-free"):
+            plan_lib.plan_packed_conv2d((1, 8, 8, 8), (3, 3, 8, 8), spec,
+                                        padding="SAME", backend="xla")
+
+    def test_construction_errors_name_family(self):
+        for build in (lambda: PackSpec(2, 2, jnp.float32.dtype),
+                      lambda: PackSpec(2, 2, jnp.int16.dtype, n_pack=3),
+                      lambda: PackSpec(2, 2, jnp.int16.dtype, shift=12)):
+            with pytest.raises(ValueError) as e:
+                build()
+            assert "int16xP2s8" in str(e.value)   # the allowed family
+
+    def test_from_config_rejects_infeasible_at_config_time(self):
+        from repro.core.quant import QuantConfig
+        bad = QuantConfig(enabled=True, w_bits=4, a_bits=4,
+                          lane_dtype="int16")
+        with pytest.raises(ValueError, match="Feasible layouts"):
+            PackSpec.from_config(bad)
+        ok = QuantConfig(enabled=True, w_bits=4, a_bits=4,
+                         lane_dtype="int32", pack_shift=16)
+        assert PackSpec.from_config(ok).k_tile >= 1
+
+    def test_str_parse_roundtrip(self):
+        for w, a in ((1, 1), (2, 2), (3, 3), (4, 4)):
+            for spec in packing.layout_family(w, a):
+                assert PackSpec.parse(str(spec)) == spec
+        # pre-layout-sweep strings (no shift suffix) -> lane default
+        assert PackSpec.parse("W2A2/int16xP2") == \
+            PackSpec(2, 2, jnp.int16.dtype)
+        with pytest.raises(ValueError, match="cannot parse"):
+            PackSpec.parse("W2A2/int64xP2")
+
+
 class TestPackedMatmulReference:
     @pytest.mark.parametrize("w_bits,a_bits,lane", [
         (1, 1, "int8"), (1, 1, "int16"), (2, 2, "int16"), (3, 2, "int16"),
