@@ -21,6 +21,14 @@
   patterns) and degrades to a single row noting the device count when the
   host has one device (force more with
   XLA_FLAGS=--xla_force_host_platform_device_count=4).
+* ``run_router`` — replica-fleet Router (serve/router.py, DESIGN.md §17)
+  under a saturating request burst: 1 replica vs 2 replicas behind the
+  load-balanced front door.  Report-only for the same reason: fleet
+  decode tok/s is the SUM of per-replica rates (each replica models
+  disjoint hardware; a process-local host shares one box), so
+  ``decode_tok_s_ratio_vs_single`` states the fleet-aggregation model
+  rather than measuring host speedup — tests/test_router.py gates the
+  semantics (identity, spillover, affinity, drain/restore).
 """
 
 from __future__ import annotations
@@ -177,6 +185,7 @@ def run_engine(quick: bool = False):
     from repro import configs
     from repro.core.quant import QuantConfig
     from repro.models import lm
+    from repro.serve.config import EngineConfig
     from repro.serve.engine import Request, ServingEngine
 
     cfg = configs.get_config("stablelm-1.6b", reduced=True).replace(
@@ -191,9 +200,9 @@ def run_engine(quick: bool = False):
 
     def bench(chunk):
         from repro.serve.engine import Metrics
-        eng = ServingEngine(cfg, params, max_batch=max_batch,
-                            max_len=PROMPT_LEN + 16, packed=False,
-                            prefill_chunk=chunk)
+        eng = ServingEngine(cfg, params, config=EngineConfig(
+            max_batch=max_batch, max_len=PROMPT_LEN + 16, packed=False,
+            prefill_chunk=chunk))
         # warmup: compile both jitted steps outside the measured window
         eng.submit(Request(uid=10_000, prompt=prompts[0],
                            max_new_tokens=4))
@@ -242,6 +251,7 @@ def run_kv_cache(quick: bool = False):
     from repro import configs
     from repro.core.quant import QuantConfig
     from repro.models import lm
+    from repro.serve.config import EngineConfig
     from repro.serve.engine import Metrics, Request, ServingEngine
     from repro.serve.prepare import cache_bytes_per_slot
 
@@ -260,8 +270,9 @@ def run_kv_cache(quick: bool = False):
     for kv_bits in (16, 8, 4, 2):
         cfg = base.replace(quant=QuantConfig(
             enabled=False, kv_bits=0 if kv_bits == 16 else kv_bits))
-        eng = ServingEngine(cfg, params, max_len=max_len, packed=False,
-                            prefill_chunk=8, hbm_cache_budget=budget)
+        eng = ServingEngine(cfg, params, config=EngineConfig(
+            max_len=max_len, packed=False, prefill_chunk=8,
+            hbm_cache_budget=budget))
         n_req = eng.max_batch
         prompts = [rng.integers(0, cfg.vocab_size, prompt_len).astype(
             np.int32) for _ in range(n_req)]
@@ -304,6 +315,7 @@ def run_sharded(quick: bool = False):
     from repro.core.quant import QuantConfig
     from repro.launch.mesh import make_serving_mesh
     from repro.models import lm
+    from repro.serve.config import EngineConfig
     from repro.serve.engine import Metrics, Request, ServingEngine
 
     n_dev = len(jax.devices())
@@ -327,8 +339,8 @@ def run_sharded(quick: bool = False):
                for _ in range(n_req)]
 
     def bench(mesh):
-        eng = ServingEngine(cfg, params, max_batch=2, max_len=32,
-                            packed=True, prefill_chunk=8, mesh=mesh)
+        eng = ServingEngine(cfg, params, mesh=mesh, config=EngineConfig(
+            max_batch=2, max_len=32, packed=True, prefill_chunk=8))
         eng.submit(Request(uid=10_000, prompt=prompts[0],
                            max_new_tokens=2))      # warmup: compile steps
         eng.run_to_completion()
@@ -356,11 +368,69 @@ def run_sharded(quick: bool = False):
     return rows
 
 
+def run_router(quick: bool = False):
+    """Replica-fleet saturation: Router(replicas=1) vs Router(replicas=2)
+    over the same seeded burst (report-only; module docstring caveat).
+
+    The burst oversubscribes each replica's bounded queue so the fleet
+    spillover engages; the 2-replica row shows the spill falling and the
+    aggregated decode rate roughly doubling by construction of the fleet
+    metric (summed per-replica rates; DESIGN.md §17).
+    """
+    from repro import configs
+    from repro.core.quant import QuantConfig
+    from repro.models import lm
+    from repro.serve.config import EngineConfig
+    from repro.serve.router import Router
+
+    cfg = configs.get_config("stablelm-1.6b", reduced=True).replace(
+        param_dtype="float32", compute_dtype="float32",
+        quant=QuantConfig(enabled=False))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    econf = EngineConfig(max_batch=2, max_len=32, packed=False,
+                         prefill_chunk=8, max_queue=2)
+    n_req = 4 if quick else 8
+    prompt_len, new_tokens = 8, 4 if quick else 8
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32)
+               for _ in range(n_req)]
+
+    def bench(replicas):
+        router = Router(cfg, params, config=econf, replicas=replicas)
+        router.submit(prompts[0], max_new_tokens=2)     # warmup: compile
+        router.run_to_completion()
+        router.reset_metrics()
+        for p in prompts:
+            router.submit(p, max_new_tokens=new_tokens)
+        router.run_to_completion()
+        return router.metrics_report()["fleet"]
+
+    single = bench(1)
+    fleet = bench(2)
+    rows = []
+    for rep in (single, fleet):
+        rows.append({
+            "case": f"router/replicas-{rep['replicas']}",
+            "replicas": rep["replicas"],
+            "requests": n_req,
+            "decode_tok_s": rep["decode_tok_s"],
+            "ttft_p95_s": rep["ttft_s"]["p95"],
+            "spilled": rep["spilled"],
+            "decode_tok_s_ratio_vs_single": round(
+                rep["decode_tok_s"]
+                / max(single["decode_tok_s"], 1e-9), 3),
+        })
+    emit(rows, ["case", "replicas", "requests", "decode_tok_s",
+                "ttft_p95_s", "spilled", "decode_tok_s_ratio_vs_single"])
+    return rows
+
+
 def run(quick: bool = False):
     return {"linear": run_linear(quick),
             "engine": run_engine(quick),
             "kv_cache": run_kv_cache(quick),
-            "sharded": run_sharded(quick)}
+            "sharded": run_sharded(quick),
+            "router": run_router(quick)}
 
 
 if __name__ == "__main__":

@@ -12,6 +12,17 @@ sharded over the kv-head axis, token-for-token identical output:
 
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         PYTHONPATH=src python examples/serve_quantized.py --model-parallel 4
+
+Replica fleet (serve/router.Router, DESIGN.md §17) — two replicas behind
+one load-balanced front door, each 2-way tensor-parallel on its own
+device group:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/serve_quantized.py \
+        --data-parallel 2 --model-parallel 2
+
+(Without enough host devices the fleet falls back to process-local
+replicas sharing the host — same Router semantics, shared hardware.)
 """
 
 import argparse
@@ -23,8 +34,42 @@ import numpy as np
 from repro import configs
 from repro.core.quant import QuantConfig
 from repro.models import lm
+from repro.serve.config import EngineConfig
 from repro.serve.engine import Request, ServingEngine
 from repro.serve.prepare import prepare_serving_params, serving_param_bytes
+
+
+def serve_fleet(cfg, params, econf, data, model):
+    """Route a request burst through a replica fleet (Router front door)."""
+    from repro.launch.mesh import make_serving_mesh
+    from repro.serve.router import Router
+
+    n_dev = len(jax.devices())
+    if n_dev >= data * model:
+        mesh = make_serving_mesh(model=model, data=data)
+        router = Router(cfg, params, config=econf, mesh=mesh)
+        print(f"fleet: {data} replicas x {model}-way TP on mesh "
+              f"{dict(mesh.shape)} ({n_dev} host devices)")
+    else:
+        router = Router(cfg, params, config=econf, replicas=data)
+        print(f"fleet: host has {n_dev} devices (< {data * model}); "
+              f"falling back to {data} process-local replicas sharing "
+              f"the host")
+    rng = np.random.default_rng(0)
+    handles = [router.submit(
+        rng.integers(0, cfg.vocab_size, 6).astype(np.int32),
+        max_new_tokens=8, session=f"user-{i % 2}") for i in range(4)]
+    t0 = time.time()
+    router.run_to_completion()
+    dt = time.time() - t0
+    fleet = router.metrics_report()["fleet"]
+    tokens = sum(len(h.output) for h in handles)
+    print(f"served {len(handles)} requests, {tokens} tokens in {dt:.1f}s "
+          f"(fleet decode {fleet['decode_tok_s']} tok/s = sum over "
+          f"{fleet['attached']} replicas; spilled {fleet['spilled']})")
+    for h in handles:
+        print(f"  req {h.uid} -> replica {h.replica}: "
+              f"{list(h.request.prompt)} -> {h.output}")
 
 
 def main():
@@ -33,6 +78,10 @@ def main():
                     help="tensor-parallel shards (needs that many devices; "
                          "force CPU devices with XLA_FLAGS=--xla_force_"
                          "host_platform_device_count=N)")
+    ap.add_argument("--data-parallel", type=int, default=1,
+                    help="replica count: >1 serves through the fleet "
+                         "Router (least-loaded placement, session "
+                         "affinity, spillover)")
     args = ap.parse_args()
 
     cfg = configs.get_config("stablelm-1.6b", reduced=True).replace(
@@ -40,13 +89,7 @@ def main():
         vocab_size=2048, param_dtype="float32", compute_dtype="float32",
         quant=QuantConfig(enabled=True, w_bits=2, a_bits=2, kv_bits=4))
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
-
-    mesh = None
-    if args.model_parallel > 1:
-        from repro.launch.mesh import make_serving_mesh
-        mesh = make_serving_mesh(args.model_parallel)
-        print(f"serving mesh: {dict(mesh.shape)} over "
-              f"{len(jax.devices())} host devices")
+    econf = EngineConfig(max_batch=2, max_len=64, packed=True)
 
     raw_bytes = serving_param_bytes(params)
     packed = prepare_serving_params(params, cfg)
@@ -55,8 +98,19 @@ def main():
           f"{packed_bytes/1e6:.1f} MB packed "
           f"({raw_bytes/packed_bytes:.1f}x smaller)")
 
-    eng = ServingEngine(cfg, params, max_batch=2, max_len=64, packed=True,
-                        mesh=mesh)
+    if args.data_parallel > 1:
+        serve_fleet(cfg, params, econf, args.data_parallel,
+                    args.model_parallel)
+        return
+
+    mesh = None
+    if args.model_parallel > 1:
+        from repro.launch.mesh import make_serving_mesh
+        mesh = make_serving_mesh(args.model_parallel)
+        print(f"serving mesh: {dict(mesh.shape)} over "
+              f"{len(jax.devices())} host devices")
+
+    eng = ServingEngine(cfg, params, config=econf, mesh=mesh)
     cap = eng.capacity_report()
     if "shard_plan" in cap:
         print(f"shard plan: {cap['shard_plan']} — packed weights "

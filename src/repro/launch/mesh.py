@@ -21,10 +21,14 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh(data: int = 1, model: int = 1):
     """Tiny mesh over the real host devices (tests / examples).
 
-    Infeasible ``(data, model)`` requests are clamped to what the host
-    actually has — loudly: sharding tests that silently ran on a 1x1 mesh
-    were passing without testing anything.
+    Both axes of the ``(data, model)`` request are validated (>= 1) and
+    infeasible requests are clamped to what the host actually has —
+    loudly: sharding tests that silently ran on a 1x1 mesh were passing
+    without testing anything.
     """
+    if data < 1 or model < 1:
+        raise ValueError(
+            f"mesh axes must be >= 1, got (data={data}, model={model})")
     n = len(jax.devices())
     data_actual = min(data, n)
     model_actual = min(model, max(1, n // data_actual))
@@ -39,15 +43,39 @@ def make_host_mesh(data: int = 1, model: int = 1):
     return jax.make_mesh((data_actual, model_actual), ("data", "model"))
 
 
-def make_serving_mesh(model: int = 1):
-    """Serving mesh: ('data', 'model') with data pinned to 1.
+def make_serving_mesh(model: int = 1, data: int = 1):
+    """Serving mesh: ('data', 'model') — a real 2-D request (DESIGN.md §17).
 
-    The serving engine is tensor-parallel only (replicated small batch,
-    sharded packed weights + kv-head-sharded caches — serve/shard.py);
-    ``model`` is the ``--model-parallel`` CLI knob.  Requests beyond the
-    host's device count clamp with the same warning as make_host_mesh.
-    Testable on CPU via XLA_FLAGS=--xla_force_host_platform_device_count=4.
+    ``model`` is the tensor-parallel width of one replica (replicated
+    small batch, sharded packed weights + kv-head-sharded caches —
+    serve/shard.py; the ``--model-parallel`` CLI knob); ``data`` is the
+    replica-fleet axis: serve/router.Router carves the mesh into ``data``
+    replica groups of ``model`` devices each (``replica_meshes``) and
+    load-balances requests across them (the ``--data-parallel`` knob).
+    Requests beyond the host's device count clamp with the same warning
+    as make_host_mesh.  Testable on CPU via
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 for (data=2,
+    model=2) and beyond.
     """
     if model < 1:
         raise ValueError(f"model parallelism must be >= 1, got {model}")
-    return make_host_mesh(data=1, model=model)
+    if data < 1:
+        raise ValueError(f"data parallelism must be >= 1, got {data}")
+    return make_host_mesh(data=data, model=model)
+
+
+def replica_meshes(mesh):
+    """Carve a ('data', 'model') mesh into per-replica (1, model) groups.
+
+    Each replica group is a standalone Mesh over one data-row's devices —
+    the serving engine's ShardPlan (tensor-parallel over 'model') applies
+    to it unchanged, and placing a replica's params/caches onto its group
+    is what makes the fleet data-parallel: replicas own disjoint devices.
+    """
+    if tuple(mesh.axis_names) != ("data", "model"):
+        raise ValueError(
+            f"expected a ('data', 'model') serving mesh, got axes "
+            f"{tuple(mesh.axis_names)}")
+    dev = mesh.devices
+    return [jax.sharding.Mesh(dev[i:i + 1], ("data", "model"))
+            for i in range(dev.shape[0])]

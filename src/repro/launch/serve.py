@@ -1,6 +1,6 @@
 """CLI server: pack a model for deployment and serve synthetic requests
-through the continuous-batching engine (chunked prefill + ragged decode,
-DESIGN.md §12).
+through the continuous-batching engine — or, with ``--data-parallel N``,
+through the replica-fleet Router (serve/router.py, DESIGN.md §17).
 
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
         --reduced --requests 4 --prefill-chunk 16
@@ -11,6 +11,18 @@ CPU-simulated mesh:
     XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
         python -m repro.launch.serve --arch stablelm-1.6b --reduced \
         --model-parallel 4 --metrics
+
+Replica fleet — a (data=2, model=2) mesh carved into two 2-way-TP
+replica groups behind one load-balanced front door:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+        python -m repro.launch.serve --arch stablelm-1.6b --reduced \
+        --data-parallel 2 --model-parallel 2 --metrics
+
+Flags are grouped (engine / sampling / quantization / parallelism /
+fleet) and the engine side is derived through a single
+``EngineConfig.from_args`` call, so the CLI and programmatic
+construction cannot drift.
 """
 
 from __future__ import annotations
@@ -23,69 +35,134 @@ import numpy as np
 
 from repro import configs
 from repro.models import lm
-from repro.serve.engine import Request, SamplingParams, ServingEngine
+from repro.serve.config import EngineConfig
+from repro.serve.engine import Request, ServingEngine
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def build_parser() -> argparse.ArgumentParser:
+    """The serving CLI surface.  Exposed (not inlined in main) so tests
+    can parse flag lists and assert EngineConfig.from_args consistency."""
+    ap = argparse.ArgumentParser(
+        description="Serve synthetic requests through the packed "
+                    "continuous-batching engine or a replica fleet.")
     ap.add_argument("--arch", required=True, choices=configs.ALL_NAMES)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=6)
     ap.add_argument("--max-new-tokens", type=int, default=8)
-    ap.add_argument("--max-batch", type=int, default=2)
-    ap.add_argument("--max-len", type=int, default=64)
-    ap.add_argument("--prefill-chunk", type=int, default=16)
-    ap.add_argument("--max-queue", type=int, default=0,
-                    help="backpressure cap on queued requests (0 = none)")
-    ap.add_argument("--temperature", type=float, default=0.0,
-                    help="0 = greedy")
-    ap.add_argument("--top-k", type=int, default=0)
-    ap.add_argument("--no-packed", action="store_true")
-    ap.add_argument("--autotune", action="store_true",
-                    help="warm-tune the serving kernel signatures missing "
-                         "from the autotune cache before planning, then "
-                         "persist the cache (tune once offline; plans come "
-                         "back cache-backed on later launches)")
-    ap.add_argument("--kv-bits", type=int, default=-1,
-                    choices=(-1, 0, 16, 8, 4, 2),
-                    help="KV cache storage precision override: 0/16 = bf16, "
-                         "8 = int8, 4/2 = bit-dense packed words; -1 keeps "
-                         "the arch config's value")
-    ap.add_argument("--hbm-cache-budget-mb", type=float, default=0,
-                    help="size batch slots from this HBM cache budget "
-                         "(slots = budget // cache bytes per slot) instead "
-                         "of --max-batch")
-    ap.add_argument("--model-parallel", type=int, default=1,
-                    help="tensor-parallel shards: serve over a ('data'=1, "
-                         "'model'=N) mesh — packed weights column-parallel, "
-                         "KV cache sharded on the kv-head axis (serve/"
-                         "shard.ShardPlan).  Testable on CPU via "
-                         "XLA_FLAGS=--xla_force_host_platform_device_"
-                         "count=N")
     ap.add_argument("--metrics", action="store_true",
-                    help="print the full engine metrics report (throughput "
-                         "split by phase, occupancy, per-request TTFT and "
-                         "time-per-output-token mean/p50/p95) plus the "
-                         "capacity/shard report as JSON")
-    args = ap.parse_args()
+                    help="print the full metrics report (throughput split "
+                         "by phase, occupancy, per-request TTFT and "
+                         "time-per-output-token mean/p50/p95; fleet "
+                         "aggregate + per-replica under --data-parallel) "
+                         "plus the capacity/shard report as JSON")
+
+    eng = ap.add_argument_group(
+        "engine", "EngineConfig fields (serve/config.py) — consumed by "
+                  "EngineConfig.from_args, the single construction path")
+    eng.add_argument("--max-batch", type=int, default=2)
+    eng.add_argument("--max-len", type=int, default=64)
+    eng.add_argument("--prefill-chunk", type=int, default=16)
+    eng.add_argument("--max-queue", type=int, default=0,
+                     help="backpressure cap on queued requests per engine "
+                          "(0 = none; under a fleet, a full replica queue "
+                          "spills to the router)")
+    eng.add_argument("--no-packed", action="store_true")
+    eng.add_argument("--autotune", action="store_true",
+                     help="warm-tune the serving kernel signatures missing "
+                          "from the autotune cache before planning, then "
+                          "persist the cache (tune once offline; plans "
+                          "come back cache-backed on later launches)")
+    eng.add_argument("--hbm-cache-budget-mb", type=float, default=0,
+                     help="size batch slots from this HBM cache budget "
+                          "(slots = budget // cache bytes per slot) "
+                          "instead of --max-batch")
+
+    samp = ap.add_argument_group("sampling")
+    samp.add_argument("--temperature", type=float, default=0.0,
+                      help="0 = greedy")
+    samp.add_argument("--top-k", type=int, default=0)
+
+    quant = ap.add_argument_group("quantization")
+    quant.add_argument("--kv-bits", type=int, default=-1,
+                       choices=(-1, 0, 16, 8, 4, 2),
+                       help="KV cache storage precision override: 0/16 = "
+                            "bf16, 8 = int8, 4/2 = bit-dense packed words; "
+                            "-1 keeps the arch config's value")
+
+    par = ap.add_argument_group("parallelism")
+    par.add_argument("--model-parallel", type=int, default=1,
+                     help="tensor-parallel shards per replica: packed "
+                          "weights column-parallel, KV cache sharded on "
+                          "the kv-head axis (serve/shard.ShardPlan).  "
+                          "Testable on CPU via XLA_FLAGS=--xla_force_"
+                          "host_platform_device_count=N")
+
+    fleet = ap.add_argument_group(
+        "fleet", "replica fleet (serve/router.Router, DESIGN.md §17)")
+    fleet.add_argument("--data-parallel", type=int, default=1,
+                       help="replica count: serve over a ('data'=N, "
+                            "'model'=M) mesh carved into N replica "
+                            "groups behind one load-balanced router "
+                            "(least-loaded placement, spillover, session "
+                            "affinity, drain/restore)")
+    return ap
+
+
+def _fleet_main(args, cfg, params, econf: EngineConfig):
+    from repro.launch.mesh import make_serving_mesh
+    from repro.serve.router import Router
+
+    mesh = make_serving_mesh(model=args.model_parallel,
+                             data=args.data_parallel)
+    router = Router(cfg, params, config=econf, mesh=mesh)
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        # alternate sessions so affinity pinning is visible in the report
+        router.submit(
+            rng.integers(0, cfg.vocab_size, args.prompt_len).astype(
+                np.int32),
+            max_new_tokens=args.max_new_tokens,
+            session=f"session-{i % 2}")
+    done = router.run_to_completion()
+    rep = router.metrics_report()
+    rep["capacity"] = router.capacity_report()
+    toks = sum(len(h.output) for h in done)
+    fleet = rep["fleet"]
+    print(f"{len(done)} requests, {toks} generated tokens across "
+          f"{fleet['attached']} replicas (mesh {dict(mesh.shape)})")
+    if args.metrics:
+        print(json.dumps(rep, indent=2))
+    else:
+        print(f"fleet prefill {fleet['prefill_tok_s']} tok/s, "
+              f"decode {fleet['decode_tok_s']} tok/s, "
+              f"ttft p95 {fleet['ttft_s']['p95']}s, "
+              f"spilled {fleet['spilled']} "
+              f"(--metrics for the full report)")
+
+
+def main():
+    args = build_parser().parse_args()
 
     cfg = configs.get_config(args.arch, reduced=args.reduced)
     if args.kv_bits >= 0:
         cfg = cfg.replace(quant=cfg.quant.replace(kv_bits=args.kv_bits))
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    econf = EngineConfig.from_args(args)
+
+    if args.data_parallel > 1:
+        _fleet_main(args, cfg, params, econf)
+        if args.autotune:
+            from repro.kernels import autotune as autotune_lib
+            print(f"autotune cache saved to "
+                  f"{autotune_lib.active_cache().save()}")
+        return
+
     mesh = None
     if args.model_parallel > 1:
         from repro.launch.mesh import make_serving_mesh
         mesh = make_serving_mesh(args.model_parallel)
-    eng = ServingEngine(
-        cfg, params, max_batch=args.max_batch, max_len=args.max_len,
-        packed=not args.no_packed, prefill_chunk=args.prefill_chunk,
-        max_queue=args.max_queue or None,
-        sampling=SamplingParams(temperature=args.temperature,
-                                top_k=args.top_k),
-        hbm_cache_budget=int(args.hbm_cache_budget_mb * 2**20) or None,
-        autotune=args.autotune, mesh=mesh)
+    eng = ServingEngine(cfg, params, config=econf, mesh=mesh)
     if args.autotune:
         from repro.kernels import autotune as autotune_lib
         print(f"autotune cache saved to "

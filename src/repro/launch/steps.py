@@ -22,6 +22,8 @@ step never materializes a full-precision cache (DESIGN.md §13).
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -206,3 +208,31 @@ def make_prefill_chunk_step(cfg, *, kv_shard_axis: str | None = None):
                                     axis=1)[:, 0], caches)
 
     return prefill_chunk_step
+
+
+def jitted_serving_steps(cfg, *, kv_shard_axis: str | None = None,
+                         mesh=None):
+    """Jitted ``(decode_step, prefill_chunk_step)`` pair, memoized per
+    (model config, TP axis, mesh device set).
+
+    A replica fleet (serve/router.Router) builds N ``ServingEngine``
+    instances over ONE model config; without memoization each engine
+    creates fresh ``jax.jit`` wrappers and re-pays trace + compile N
+    times for identical computations.  Sharing the wrapper lets
+    layout-identical replicas (same config, same — or no — mesh) reuse
+    one executable.  The mesh's device ids are part of the key because
+    jit executables bake in device placement: replicas on disjoint
+    device groups must NOT share a wrapper, or the first replica's
+    trace-time ``activation_mesh`` would leak into the others.
+    """
+    key = None if mesh is None else (
+        tuple(d.id for d in mesh.devices.flat),
+        tuple(sorted(mesh.shape.items())))
+    return _jitted_serving_steps(cfg, kv_shard_axis, key)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_serving_steps(cfg, kv_shard_axis, _mesh_key):
+    return (jax.jit(make_decode_step(cfg, kv_shard_axis=kv_shard_axis)),
+            jax.jit(make_prefill_chunk_step(cfg,
+                                            kv_shard_axis=kv_shard_axis)))

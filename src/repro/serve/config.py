@@ -1,0 +1,180 @@
+"""EngineConfig: the one serving construction surface (DESIGN.md §17).
+
+``ServingEngine.__init__`` had grown 12 ad-hoc keywords, mirrored
+flag-for-flag in launch/serve.py — two construction paths that could (and
+did) drift.  :class:`EngineConfig` consolidates every engine knob into one
+frozen, validated object that programmatic callers, the CLI
+(:meth:`EngineConfig.from_args`), and the replica-fleet Router
+(serve/router.py — which stamps the same config onto every replica)
+construct identically.
+
+Validation lives in ``__post_init__`` so a bad config fails at
+construction, before any params are packed or steps jitted; the HBM
+budget -> slot-count math, which used to live inline in the engine
+constructor, is :meth:`slots_for` so the capacity rule is testable without
+building an engine.
+
+Legacy keyword construction (``ServingEngine(cfg, params, max_batch=4,
+...)``) still works for one release through a ``DeprecationWarning`` shim
+that forwards to :meth:`from_legacy_kwargs`, which preserves the old
+clamping semantics (e.g. ``prefill_chunk=0`` silently clamped to 1 where
+the new validation raises).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decoding control; temperature <= 0 means greedy."""
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+
+    def __post_init__(self):
+        if not math.isfinite(self.temperature):
+            raise ValueError(
+                f"sampling temperature must be finite, got "
+                f"{self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Frozen construction config for one :class:`ServingEngine`.
+
+    Field mapping from the legacy keyword surface (the deprecation shim
+    forwards one-to-one; migration table in DESIGN.md §17):
+
+    ==================  =====================================
+    legacy kwarg        EngineConfig field
+    ==================  =====================================
+    max_batch           max_batch
+    max_len             max_len
+    packed              packed
+    greedy              folded into ``sampling`` (greedy=False
+                        became SamplingParams(temperature=1.0))
+    dense_store         dense_store
+    prefill_chunk       prefill_chunk (now validated >= 1)
+    max_queue           max_queue
+    sampling            sampling (never None; default greedy)
+    hbm_cache_budget    hbm_cache_budget
+    autotune            autotune
+    ==================  =====================================
+    """
+
+    max_batch: int = 4
+    max_len: int = 512
+    packed: bool = True
+    dense_store: bool = False
+    prefill_chunk: int = 16
+    max_queue: int | None = None
+    sampling: SamplingParams = SamplingParams()
+    hbm_cache_budget: int | None = None
+    autotune: bool = False
+
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.max_len < 1:
+            raise ValueError(f"max_len must be >= 1, got {self.max_len}")
+        if self.prefill_chunk < 1:
+            raise ValueError(
+                f"prefill_chunk must be >= 1, got {self.prefill_chunk}")
+        if self.max_queue is not None and self.max_queue < 1:
+            raise ValueError(
+                f"max_queue must be None (unbounded) or >= 1, got "
+                f"{self.max_queue}")
+        if self.hbm_cache_budget is not None and self.hbm_cache_budget < 1:
+            raise ValueError(
+                f"hbm_cache_budget must be None or a positive byte count, "
+                f"got {self.hbm_cache_budget}")
+        if not isinstance(self.sampling, SamplingParams):
+            raise TypeError(
+                f"sampling must be a SamplingParams, got "
+                f"{type(self.sampling).__name__}")
+        if self.dense_store and not self.packed:
+            raise ValueError(
+                "dense_store selects the bit-dense packed weight layout; "
+                "it requires packed=True")
+        if self.autotune and not self.packed:
+            raise ValueError(
+                "autotune warm-tunes the packed kernel signatures; it "
+                "requires packed=True")
+
+    # ------------------------------------------------------------------
+    # Capacity math (moved out of ServingEngine.__init__, DESIGN.md §13)
+    # ------------------------------------------------------------------
+
+    def slots_for(self, cache_bytes_per_slot: int) -> int:
+        """Admitted batch slots: the HBM-budget capacity rule.
+
+        With no budget the requested ``max_batch`` stands; with one, the
+        engine admits ``budget // bytes-per-slot`` concurrent sequences —
+        quantized KV caches (cfg.quant.kv_bits in {8, 4, 2}) convert
+        their byte density directly into slots.
+        """
+        if self.hbm_cache_budget is None:
+            return self.max_batch
+        slots = int(self.hbm_cache_budget // cache_bytes_per_slot)
+        if slots < 1:
+            raise ValueError(
+                f"hbm_cache_budget {self.hbm_cache_budget} < one slot's "
+                f"cache ({cache_bytes_per_slot} bytes at max_len "
+                f"{self.max_len})")
+        return slots
+
+    # ------------------------------------------------------------------
+    # Construction paths
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def from_args(cls, args) -> "EngineConfig":
+        """Build from the launch/serve.py argparse namespace.
+
+        The CLI derives its engine side through exactly this method, so
+        flag surface and programmatic construction cannot drift — adding
+        an engine knob means adding a field here and a flag in the CLI's
+        ``engine``/``sampling`` groups, nothing else.
+        """
+        return cls(
+            max_batch=args.max_batch,
+            max_len=args.max_len,
+            packed=not args.no_packed,
+            dense_store=getattr(args, "dense_store", False),
+            prefill_chunk=args.prefill_chunk,
+            max_queue=args.max_queue or None,
+            sampling=SamplingParams(temperature=args.temperature,
+                                    top_k=args.top_k),
+            hbm_cache_budget=int(args.hbm_cache_budget_mb * 2**20) or None,
+            autotune=args.autotune)
+
+    @classmethod
+    def from_legacy_kwargs(cls, *, max_batch: int = 4, max_len: int = 512,
+                           packed: bool = True, greedy: bool = True,
+                           dense_store: bool = False,
+                           prefill_chunk: int = 16,
+                           max_queue: int | None = None,
+                           sampling: SamplingParams | None = None,
+                           hbm_cache_budget: int | None = None,
+                           autotune: bool = False) -> "EngineConfig":
+        """The deprecation shim's target: old keyword surface, old
+        semantics (``greedy`` folded into sampling, ``prefill_chunk``
+        clamped instead of rejected).  Unknown keywords raise TypeError
+        at the call boundary exactly as the old signature did."""
+        if sampling is None:
+            sampling = SamplingParams(temperature=0.0 if greedy else 1.0)
+        return cls(
+            max_batch=max_batch, max_len=max_len, packed=packed,
+            dense_store=dense_store,
+            prefill_chunk=max(1, int(prefill_chunk)),
+            max_queue=max_queue, sampling=sampling,
+            hbm_cache_budget=hbm_cache_budget, autotune=autotune)

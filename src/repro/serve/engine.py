@@ -23,6 +23,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import time
+import warnings
 from collections import deque
 
 import jax
@@ -31,20 +32,12 @@ import numpy as np
 
 from repro.launch import steps as steps_lib
 from repro.models import lm
+from repro.serve.config import EngineConfig, SamplingParams
 from repro.serve.prepare import (build_layer_plans, cache_bytes_per_slot,
                                  prepare_serving_params)
 
-
-@dataclasses.dataclass(frozen=True)
-class SamplingParams:
-    """Per-request decoding control; temperature <= 0 means greedy."""
-    temperature: float = 0.0
-    top_k: int = 0
-    seed: int = 0
-
-    @property
-    def greedy(self) -> bool:
-        return self.temperature <= 0.0
+__all__ = ["EngineConfig", "Metrics", "Request", "SamplingParams",
+           "ServingEngine"]
 
 
 @dataclasses.dataclass
@@ -132,13 +125,28 @@ class ServingEngine:
     """Admission scheduler over chunked prefill + ragged decode (module
     docstring; scheduler design in DESIGN.md §12)."""
 
-    def __init__(self, cfg, params, *, max_batch: int = 4,
-                 max_len: int = 512, packed: bool = True, greedy=True,
-                 dense_store: bool = False, prefill_chunk: int = 16,
-                 max_queue: int | None = None,
-                 sampling: SamplingParams | None = None,
-                 hbm_cache_budget: int | None = None,
-                 autotune: bool = False, mesh=None):
+    def __init__(self, cfg, params, *, config: EngineConfig | None = None,
+                 mesh=None, **legacy):
+        # One constructor path (DESIGN.md §17): a frozen, pre-validated
+        # EngineConfig.  The legacy 12-keyword surface forwards through a
+        # deprecation shim for one release; ``mesh`` stays a direct
+        # argument because it is a live placement object (devices), not
+        # serializable configuration.
+        if legacy:
+            if config is not None:
+                raise TypeError(
+                    "pass either config=EngineConfig(...) or the legacy "
+                    f"engine keywords, not both (got {sorted(legacy)})")
+            warnings.warn(
+                "ServingEngine(max_batch=..., ...) keyword construction "
+                "is deprecated; pass config=EngineConfig(...) "
+                "(repro.serve.config).  The keyword shim will be removed "
+                "in the next release.",
+                DeprecationWarning, stacklevel=2)
+            config = EngineConfig.from_legacy_kwargs(**legacy)
+        config = config if config is not None else EngineConfig()
+        self.config = config
+        packed = config.packed
         self.cfg = cfg
         # Mesh-native serving (DESIGN.md §15): with a mesh, a ShardPlan
         # makes the cross-device layout explicit — packed weights
@@ -158,30 +166,23 @@ class ServingEngine:
         # Slot capacity is cache-bytes-aware: with an explicit HBM cache
         # budget the engine admits budget // bytes-per-slot concurrent
         # sequences, so quantized caches (cfg.quant.kv_bits in {8, 4, 2})
-        # convert their density directly into batch slots (DESIGN.md §13).
-        self.cache_bytes_per_slot = cache_bytes_per_slot(cfg, max_len)
-        if hbm_cache_budget is not None:
-            slots = int(hbm_cache_budget // self.cache_bytes_per_slot)
-            if slots < 1:
-                raise ValueError(
-                    f"hbm_cache_budget {hbm_cache_budget} < one slot's "
-                    f"cache ({self.cache_bytes_per_slot} bytes at "
-                    f"max_len {max_len})")
-            max_batch = slots
-        self.hbm_cache_budget = hbm_cache_budget
+        # convert their density directly into batch slots — the capacity
+        # rule itself lives in EngineConfig.slots_for (DESIGN.md §13).
+        self.cache_bytes_per_slot = cache_bytes_per_slot(cfg, config.max_len)
+        max_batch = config.slots_for(self.cache_bytes_per_slot)
+        self.hbm_cache_budget = config.hbm_cache_budget
         self.max_batch = max_batch
-        self.max_len = max_len
-        self.prefill_chunk = max(1, int(prefill_chunk))
+        self.max_len = config.max_len
+        self.prefill_chunk = config.prefill_chunk
         if cfg.sliding_window:
             # ring caches admit only token-by-token prefill: a >1-token
             # window would overwrite ring slots still visible to earlier
             # queries of the same window (attention rejects that case)
             self.prefill_chunk = 1
-        self.max_queue = max_queue
-        self.sampling = sampling if sampling is not None else \
-            SamplingParams(temperature=0.0 if greedy else 1.0)
-        self.params = prepare_serving_params(params, cfg,
-                                             dense_store=dense_store) \
+        self.max_queue = config.max_queue
+        self.sampling = config.sampling
+        self.params = prepare_serving_params(
+            params, cfg, dense_store=config.dense_store) \
             if packed else params
         # Kernel plans are fixed at engine init (paper §IV: one execution
         # plan per layer, chosen offline) for both jitted row counts —
@@ -193,22 +194,26 @@ class ServingEngine:
         self.plans = build_layer_plans(
             self.params, cfg, batch_rows=max_batch,
             prefill_rows=max_batch * self.prefill_chunk,
-            autotune=autotune, shard_plan=self.shard_plan) if packed else {}
+            autotune=config.autotune,
+            shard_plan=self.shard_plan) if packed else {}
         if self.shard_plan is not None:
             self.params = self.shard_plan.place_params(self.params)
-        self._decode = jax.jit(
-            steps_lib.make_decode_step(cfg, kv_shard_axis=self._tp_axis))
-        self._prefill = jax.jit(steps_lib.make_prefill_chunk_step(
-            cfg, kv_shard_axis=self._tp_axis))
+        # Jitted steps are memoized per (cfg, tp axis, mesh devices): a
+        # replica fleet (serve/router.Router) over one model shares a
+        # single trace/compile across layout-identical replicas instead of
+        # paying it N times.
+        self._decode, self._prefill = steps_lib.jitted_serving_steps(
+            cfg, kv_shard_axis=self._tp_axis, mesh=self.mesh)
         self._queue: deque[Request] = deque()
-        self.caches = lm.init_caches(cfg, max_batch, max_len,
+        self.caches = lm.init_caches(cfg, max_batch, self.max_len,
                                      dtype=jnp.bfloat16)
         if self.shard_plan is not None:
             self.caches = self.shard_plan.place_caches(self.caches, cfg,
                                                        max_batch)
         # batch-1 fresh-cache template: admission resets a slot's rows from
         # it (recurrent states have non-zero init, e.g. mLSTM m = -inf)
-        self._fresh = lm.init_caches(cfg, 1, max_len, dtype=jnp.bfloat16)
+        self._fresh = lm.init_caches(cfg, 1, self.max_len,
+                                     dtype=jnp.bfloat16)
         # per-slot bookkeeping
         self.slot_req: list = [None] * max_batch
         self.slot_pos = np.zeros(max_batch, np.int32)   # tokens in cache
@@ -242,7 +247,10 @@ class ServingEngine:
         if self.max_queue is not None and len(self._queue) >= self.max_queue:
             self.metrics.rejected += 1
             return False
-        req.submit_time = time.perf_counter()
+        if not req.submit_time:
+            # the fleet Router stamps submit_time at fleet admission so a
+            # spilled request's TTFT includes its spillover wait
+            req.submit_time = time.perf_counter()
         self._queue.append(req)
         return True
 
@@ -425,6 +433,24 @@ class ServingEngine:
     def num_pending(self) -> int:
         return len(self._queue)
 
+    @property
+    def num_live(self) -> int:
+        """Occupied batch slots (the Router's load term, with the queue)."""
+        return sum(r is not None for r in self.slot_req)
+
+    def take_finished(self) -> list:
+        """Hand over every request retired since the last call (the Router
+        collects after each fleet tick; run_to_completion uses it too)."""
+        done, self._finished = self._finished, []
+        return done
+
+    def take_queued(self) -> list:
+        """Drain the admission queue WITHOUT serving it: replica drain
+        support — the Router re-routes these to other replicas while this
+        engine's live slots retire."""
+        queued, self._queue = list(self._queue), deque()
+        return queued
+
     def plan_report(self):
         """Flat per-layer plan rows (path + KernelPlan.describe())."""
         return [{"layer": path, **plan.describe()}
@@ -449,5 +475,4 @@ class ServingEngine:
         within a single step() is still collected."""
         while self.step():
             pass
-        done, self._finished = self._finished, []
-        return done
+        return self.take_finished()

@@ -1,0 +1,183 @@
+"""EngineConfig: the redesigned serving construction surface (DESIGN.md
+§17) — validation at construction, the HBM-budget capacity rule as a
+method, CLI/programmatic construction through one path, and the legacy
+keyword deprecation shim on ServingEngine.
+"""
+
+import dataclasses
+import warnings
+
+import jax
+import pytest
+
+from repro import configs
+from repro.core.quant import QuantConfig
+from repro.models import lm
+from repro.serve.config import EngineConfig, SamplingParams
+from repro.serve.engine import ServingEngine
+
+
+def float_cfg(name="stablelm-1.6b"):
+    return configs.get_config(name, reduced=True).replace(
+        param_dtype="float32", compute_dtype="float32",
+        quant=QuantConfig(enabled=False))
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = float_cfg()
+    return cfg, lm.init_params(jax.random.PRNGKey(0), cfg)
+
+
+# ---------------------------------------------------------------------------
+# Validation in __post_init__
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw,match", [
+    (dict(max_batch=0), "max_batch"),
+    (dict(max_len=0), "max_len"),
+    (dict(prefill_chunk=0), "prefill_chunk"),
+    (dict(max_queue=0), "max_queue"),
+    (dict(hbm_cache_budget=0), "hbm_cache_budget"),
+    (dict(dense_store=True, packed=False), "dense_store"),
+    (dict(autotune=True, packed=False), "autotune"),
+])
+def test_engine_config_validation_errors(kw, match):
+    with pytest.raises(ValueError, match=match):
+        EngineConfig(**kw)
+
+
+def test_engine_config_sampling_type_checked():
+    with pytest.raises(TypeError, match="SamplingParams"):
+        EngineConfig(sampling={"temperature": 1.0})
+
+
+def test_sampling_params_validation():
+    with pytest.raises(ValueError, match="top_k"):
+        SamplingParams(top_k=-1)
+    with pytest.raises(ValueError, match="finite"):
+        SamplingParams(temperature=float("nan"))
+    assert SamplingParams(temperature=-1.0).greedy     # <= 0 means greedy
+
+
+def test_engine_config_frozen():
+    cfg = EngineConfig()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.max_batch = 8
+
+
+# ---------------------------------------------------------------------------
+# Capacity rule (budget/slot math moved out of ServingEngine.__init__)
+# ---------------------------------------------------------------------------
+
+def test_slots_for_budget_math():
+    assert EngineConfig(max_batch=3).slots_for(1000) == 3   # no budget
+    c = EngineConfig(max_batch=1, hbm_cache_budget=4096)
+    assert c.slots_for(1000) == 4
+    with pytest.raises(ValueError, match="hbm_cache_budget"):
+        c.slots_for(8192)                                   # < one slot
+
+
+def test_engine_resolves_slots_from_budget(tiny):
+    cfg, params = tiny
+    from repro.serve.prepare import cache_bytes_per_slot
+    per_slot = cache_bytes_per_slot(cfg, 32)
+    eng = ServingEngine(cfg, params, config=EngineConfig(
+        max_batch=1, max_len=32, packed=False,
+        hbm_cache_budget=3 * per_slot))
+    assert eng.max_batch == 3
+    assert eng.config.max_batch == 1        # config records the request
+
+
+# ---------------------------------------------------------------------------
+# One construction path: CLI from_args == programmatic
+# ---------------------------------------------------------------------------
+
+def test_from_args_matches_programmatic():
+    from repro.launch.serve import build_parser
+    args = build_parser().parse_args([
+        "--arch", "stablelm-1.6b", "--reduced", "--max-batch", "3",
+        "--max-len", "48", "--prefill-chunk", "8", "--max-queue", "5",
+        "--temperature", "0.7", "--top-k", "4",
+        "--hbm-cache-budget-mb", "0"])
+    assert EngineConfig.from_args(args) == EngineConfig(
+        max_batch=3, max_len=48, packed=True, prefill_chunk=8,
+        max_queue=5,
+        sampling=SamplingParams(temperature=0.7, top_k=4))
+
+
+def test_from_args_zero_sentinels_map_to_none():
+    from repro.launch.serve import build_parser
+    args = build_parser().parse_args(
+        ["--arch", "stablelm-1.6b", "--no-packed"])
+    c = EngineConfig.from_args(args)
+    assert c.max_queue is None and c.hbm_cache_budget is None
+    assert not c.packed
+
+
+def test_cli_flags_are_grouped():
+    """The api_redesign satellite: flags live in named argparse groups."""
+    from repro.launch.serve import build_parser
+    groups = {g.title for g in build_parser()._action_groups}
+    assert {"engine", "sampling", "quantization", "parallelism",
+            "fleet"} <= groups
+    fleet = [g for g in build_parser()._action_groups
+             if g.title == "fleet"][0]
+    assert any("--data-parallel" in a.option_strings
+               for a in fleet._group_actions)
+
+
+# ---------------------------------------------------------------------------
+# Legacy keyword shim (one release, DeprecationWarning)
+# ---------------------------------------------------------------------------
+
+def test_legacy_kwargs_warn_and_forward(tiny):
+    cfg, params = tiny
+    with pytest.warns(DeprecationWarning, match="EngineConfig"):
+        eng = ServingEngine(cfg, params, max_batch=3, max_len=48,
+                            packed=False, prefill_chunk=8, max_queue=2)
+    assert eng.config == EngineConfig(
+        max_batch=3, max_len=48, packed=False, prefill_chunk=8,
+        max_queue=2)
+    assert (eng.max_batch, eng.max_len, eng.prefill_chunk) == (3, 48, 8)
+
+
+def test_legacy_greedy_flag_folds_into_sampling(tiny):
+    cfg, params = tiny
+    with pytest.warns(DeprecationWarning):
+        eng = ServingEngine(cfg, params, max_len=32, packed=False,
+                            greedy=False)
+    assert eng.sampling == SamplingParams(temperature=1.0)
+
+
+def test_legacy_prefill_chunk_clamps_like_before(tiny):
+    """Old constructor clamped prefill_chunk to >= 1; the shim preserves
+    that, while direct EngineConfig construction now raises."""
+    cfg, params = tiny
+    with pytest.warns(DeprecationWarning):
+        eng = ServingEngine(cfg, params, max_len=32, packed=False,
+                            prefill_chunk=0)
+    assert eng.prefill_chunk == 1
+
+
+def test_config_plus_legacy_kwargs_rejected(tiny):
+    cfg, params = tiny
+    with pytest.raises(TypeError, match="not both"):
+        ServingEngine(cfg, params, config=EngineConfig(), max_batch=2)
+
+
+def test_unknown_legacy_kwarg_rejected(tiny):
+    cfg, params = tiny
+    with pytest.raises(TypeError):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            ServingEngine(cfg, params, batch_size=2)
+
+
+def test_config_path_emits_no_deprecation(tiny):
+    cfg, params = tiny
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        eng = ServingEngine(cfg, params, config=EngineConfig(
+            max_batch=1, max_len=32, packed=False))
+    assert eng.config.max_batch == 1

@@ -236,6 +236,7 @@ def test_quantized_kv_decode_tracks_full_precision(bits, tol):
 def test_cache_bytes_shrink_and_budget_slots():
     """4-bit cache bytes/slot shrink >= 3.5x vs bf16 at head_dim 64, and a
     fixed HBM budget admits proportionally more engine slots."""
+    from repro.serve.config import EngineConfig
     from repro.serve.engine import ServingEngine
     from repro.serve.prepare import cache_bytes_per_slot
     base = configs.get_config("stablelm-1.6b", reduced=True).replace(
@@ -257,8 +258,8 @@ def test_cache_bytes_shrink_and_budget_slots():
     slots = {}
     for bits in (0, 4):
         cfg = base.replace(quant=QuantConfig(enabled=False, kv_bits=bits))
-        eng = ServingEngine(cfg, params, max_len=max_len, packed=False,
-                            hbm_cache_budget=budget)
+        eng = ServingEngine(cfg, params, config=EngineConfig(
+            max_len=max_len, packed=False, hbm_cache_budget=budget))
         slots[bits] = eng.max_batch
         rep = eng.capacity_report()
         assert rep["cache_bytes_per_slot"] == bytes_of[bits]
@@ -267,14 +268,15 @@ def test_cache_bytes_shrink_and_budget_slots():
     assert slots[4] >= int(3.5 * slots[0])
 
     with pytest.raises(ValueError, match="hbm_cache_budget"):
-        ServingEngine(base, params, max_len=max_len, packed=False,
-                      hbm_cache_budget=1)
+        ServingEngine(base, params, config=EngineConfig(
+            max_len=max_len, packed=False, hbm_cache_budget=1))
 
 
 def test_engine_end_to_end_with_packed_kv_cache():
     """The continuous-batching engine generates finite, reproducible output
     through a 2-bit packed cache (write path: ragged scatter; read path:
     fused dequant) and matches its own single-request schedule."""
+    from repro.serve.config import EngineConfig
     from repro.serve.engine import Request, ServingEngine
     cfg = kv_cfg("stablelm-1.6b", 2)
     params = lm.init_params(jax.random.PRNGKey(5), cfg)
@@ -283,8 +285,9 @@ def test_engine_end_to_end_with_packed_kv_cache():
                for n in (7, 3, 5)]
 
     def run(max_batch):
-        eng = ServingEngine(cfg, params, max_batch=max_batch, max_len=32,
-                            packed=False, prefill_chunk=4)
+        eng = ServingEngine(cfg, params, config=EngineConfig(
+            max_batch=max_batch, max_len=32, packed=False,
+            prefill_chunk=4))
         for i, p in enumerate(prompts):
             assert eng.submit(Request(uid=i, prompt=p, max_new_tokens=4))
         return {r.uid: tuple(r.output) for r in eng.run_to_completion()}

@@ -1,0 +1,363 @@
+"""Replica-fleet Router (serve/router.py, DESIGN.md §17).
+
+The tentpole invariant: a fleet of N engine replicas behind the Router is
+token-for-token identical to one engine — per-slot sampling is keyed on
+``(sampling.seed, uid)``, engine-independent, so WHERE a request lands
+never changes WHAT it generates.  On top of that identity the Router adds
+least-loaded placement, per-replica backpressure feeding the fleet
+spillover queue, session affinity, and drain/restore with param handoff
+through the train/checkpoint machinery.
+
+The ``(data=2, model=2)`` mesh tests ride the `shard` CI lane (forced
+8-device CPU host) and skip below 8 devices; everything else runs on the
+plain tier-1 lane with process-local replicas.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.quant import QuantConfig
+from repro.launch.mesh import make_serving_mesh, replica_meshes
+from repro.serve.config import EngineConfig, SamplingParams
+from repro.serve.engine import Request, ServingEngine
+from repro.serve.router import Router, aggregate_reports
+from repro.train import checkpoint
+
+
+def float_cfg(name="stablelm-1.6b"):
+    return configs.get_config(name, reduced=True).replace(
+        param_dtype="float32", compute_dtype="float32",
+        quant=QuantConfig(enabled=False))
+
+
+def packed_cfg(name="stablelm-1.6b", w_bits=2, kv_bits=4):
+    return configs.get_config(name, reduced=True).replace(
+        param_dtype="float32", compute_dtype="float32",
+        quant=QuantConfig(enabled=True, w_bits=w_bits, a_bits=w_bits,
+                          lane_dtype="int16", kv_bits=kv_bits))
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = float_cfg()
+    return cfg, lm_params(cfg)
+
+
+def lm_params(cfg):
+    from repro.models import lm
+    return lm.init_params(jax.random.PRNGKey(0), cfg)
+
+
+def seeded_prompts(cfg, lens, seed=1):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+            for n in lens]
+
+
+def fleet_config(**kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("packed", False)
+    kw.setdefault("prefill_chunk", 4)
+    return EngineConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Placement
+# ---------------------------------------------------------------------------
+
+def test_least_loaded_placement_spreads(tiny):
+    cfg, params = tiny
+    router = Router(cfg, params, config=fleet_config(), replicas=2)
+    handles = [router.submit(p, max_new_tokens=3)
+               for p in seeded_prompts(cfg, (5, 5, 5, 5, 5, 5))]
+    placed = [h.replica for h in handles]
+    assert placed == [0, 1, 0, 1, 0, 1]     # ties break to lowest index
+    done = router.run_to_completion()
+    assert len(done) == 6 and all(h.done for h in done)
+
+
+def test_fleet_token_identical_to_single_engine(tiny):
+    """Outputs must not depend on which replica served the request."""
+    cfg, params = tiny
+    prompts = seeded_prompts(cfg, (7, 3, 11, 5))
+    sampling = [None, SamplingParams(temperature=0.8, top_k=5, seed=3),
+                None, SamplingParams(temperature=1.0, seed=9)]
+
+    single = ServingEngine(cfg, params, config=fleet_config())
+    for i, (p, sp) in enumerate(zip(prompts, sampling)):
+        assert single.submit(Request(uid=i, prompt=p, max_new_tokens=5,
+                                     sampling=sp))
+    want = {r.uid: tuple(r.output) for r in single.run_to_completion()}
+
+    router = Router(cfg, params, config=fleet_config(), replicas=2)
+    handles = [router.submit(p, sp, max_new_tokens=5)
+               for p, sp in zip(prompts, sampling)]
+    router.run_to_completion()
+    assert len({h.replica for h in handles}) == 2   # really load-balanced
+    got = {h.uid: tuple(h.output) for h in handles}
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# Backpressure -> spillover
+# ---------------------------------------------------------------------------
+
+def test_spillover_under_full_replicas(tiny):
+    cfg, params = tiny
+    router = Router(cfg, params, replicas=2,
+                    config=fleet_config(max_batch=1, max_queue=1))
+    handles = [router.submit(p, max_new_tokens=3)
+               for p in seeded_prompts(cfg, (4,) * 6)]
+    # one queued request per replica before any steps; the rest spill
+    assert [h.replica for h in handles[:2]] == [0, 1]
+    assert all(h.replica is None and h.spilled for h in handles[2:])
+    assert router.spilled == 4 and router.num_pending == 6
+
+    done = router.run_to_completion()
+    assert len(done) == 6 and all(h.done for h in handles)
+    fleet = router.metrics_report()["fleet"]
+    # spillover is router-side waiting, never a client-visible rejection
+    assert fleet["rejected"] == 0
+    assert fleet["retired"] == 6
+    assert fleet["spill_pending"] == 0 and fleet["spill_peak"] == 4
+
+
+def test_spilled_requests_keep_fleet_admission_ttft(tiny):
+    """TTFT clocks from Router.submit; spillover wait is client-visible
+    latency, so a spilled request's TTFT must cover it."""
+    cfg, params = tiny
+    router = Router(cfg, params, replicas=1,
+                    config=fleet_config(max_batch=1, max_queue=1))
+    for p in seeded_prompts(cfg, (4, 4, 4)):
+        router.submit(p, max_new_tokens=4)
+    router.run_to_completion()
+    fleet = router.metrics_report()["fleet"]
+    ttft = fleet["ttft_s"]
+    # 3 sequential requests through 1 slot: the last one's TTFT includes
+    # two full residencies, so the spread must be visibly nonzero
+    assert ttft["p95"] > ttft["p50"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Session affinity
+# ---------------------------------------------------------------------------
+
+def test_session_affinity_overrides_least_loaded(tiny):
+    cfg, params = tiny
+    router = Router(cfg, params, config=fleet_config(), replicas=2)
+    prompts = seeded_prompts(cfg, (5,) * 5)
+    first = router.submit(prompts[0], session="alice", max_new_tokens=3)
+    assert first.replica == 0
+    # load replica 0 past replica 1 so least-loaded would now pick 1 ...
+    router.submit(prompts[1], max_new_tokens=3)     # -> 1 (least loaded)
+    router.submit(prompts[2], max_new_tokens=3)     # -> 0 or 1
+    pinned = router.submit(prompts[3], session="alice", max_new_tokens=3)
+    assert pinned.replica == 0                      # ... but the pin wins
+    router.run_to_completion()
+    assert router.metrics_report()["fleet"]["sessions"] == 1
+
+
+def test_full_pinned_replica_waits_not_relocates(tiny):
+    """A session whose replica is full WAITS in spillover for that
+    replica; landing elsewhere would abandon its cache locality."""
+    cfg, params = tiny
+    router = Router(cfg, params, replicas=2,
+                    config=fleet_config(max_batch=1, max_queue=2))
+    router.submit(seeded_prompts(cfg, (4,))[0], session="bob",
+                  max_new_tokens=3)
+    router.submit(seeded_prompts(cfg, (4,), seed=2)[0], session="bob",
+                  max_new_tokens=3)   # fills replica 0's queue of 2
+    third = router.submit(seeded_prompts(cfg, (4,), seed=3)[0],
+                          session="bob", max_new_tokens=3)
+    assert third.spilled and third.replica is None  # replica 1 has room
+    router.run_to_completion()
+    assert third.replica == 0                       # placed on its pin
+
+
+# ---------------------------------------------------------------------------
+# Drain / restore
+# ---------------------------------------------------------------------------
+
+def test_drain_requeues_waiting_requests(tiny):
+    cfg, params = tiny
+    router = Router(cfg, params, replicas=2,
+                    config=fleet_config(max_batch=1, max_queue=4))
+    handles = [router.submit(p, max_new_tokens=3)
+               for p in seeded_prompts(cfg, (4,) * 4)]
+    assert [h.replica for h in handles] == [0, 1, 0, 1]
+    router.step()       # each replica admits its first request to a slot
+    info = router.drain(0)
+    assert info["requeued"] == 1        # the queued one; the live one ran
+    assert handles[2].spilled
+    done = router.run_to_completion()
+    assert len(done) == 4
+    assert handles[2].replica == 1      # re-placed on the survivor
+    fleet = router.metrics_report()["fleet"]
+    assert fleet["attached"] == 1 and fleet["drains"] == 1
+    assert fleet["retired"] == 4        # drained replica's history counts
+
+
+def test_drain_restore_token_identity(tiny, tmp_path):
+    """Drain -> checkpoint handoff -> restore must be invisible in the
+    tokens: the restored replica serves exactly what a never-drained
+    engine would (packing is deterministic, restore() round-trips the
+    params through train/checkpoint)."""
+    cfg, params = tiny
+    prompts = seeded_prompts(cfg, (7, 3, 5))
+    single = ServingEngine(cfg, params, config=fleet_config())
+    for i, p in enumerate(prompts):
+        single.submit(Request(uid=i, prompt=p, max_new_tokens=4))
+    want = [tuple(r.output)
+            for r in sorted(single.run_to_completion(), key=lambda r: r.uid)]
+
+    router = Router(cfg, params, config=fleet_config(), replicas=2,
+                    checkpoint_dir=tmp_path)
+    router.submit(prompts[0], max_new_tokens=4)
+    router.run_to_completion()
+    info = router.drain(0)
+    assert info["checkpoint"] == {"directory": str(tmp_path), "step": 0}
+    assert checkpoint.latest_step(tmp_path) == 0
+    with pytest.raises(ValueError, match="detached"):
+        router.drain(0)
+
+    router.restore(0)
+    with pytest.raises(ValueError, match="attached"):
+        router.restore(0)
+    handles = [router.submit(p, max_new_tokens=4) for p in prompts]
+    router.run_to_completion()
+    assert [tuple(h.output) for h in handles] == want
+    fleet = router.metrics_report()["fleet"]
+    assert fleet["drains"] == 1 and fleet["restores"] == 1
+    assert fleet["attached"] == 2
+
+
+def test_run_to_completion_refuses_headless_spillover(tiny):
+    cfg, params = tiny
+    router = Router(cfg, params, replicas=1,
+                    config=fleet_config(max_batch=1, max_queue=1))
+    for p in seeded_prompts(cfg, (4,) * 3):
+        router.submit(p, max_new_tokens=3)
+    router.drain(0)
+    assert router.num_pending == 3      # 2 spilled + 1 requeued by drain
+    with pytest.raises(RuntimeError, match="restore"):
+        router.run_to_completion()
+    router.restore(0)
+    assert len(router.run_to_completion()) == 3
+
+
+# ---------------------------------------------------------------------------
+# Admission validation + construction
+# ---------------------------------------------------------------------------
+
+def test_oversize_request_rejected_at_the_door(tiny):
+    cfg, params = tiny
+    router = Router(cfg, params, config=fleet_config(max_len=16))
+    with pytest.raises(ValueError, match="max_len"):
+        router.submit(np.zeros(10, np.int32), max_new_tokens=10)
+
+
+def test_replica_count_validated(tiny):
+    cfg, params = tiny
+    with pytest.raises(ValueError, match="replicas"):
+        Router(cfg, params, config=fleet_config(), replicas=0)
+
+
+def test_mesh_contradicting_replicas_rejected(tiny):
+    cfg, params = tiny
+    mesh = make_serving_mesh(model=1, data=1)
+    with pytest.raises(ValueError, match="data"):
+        Router(cfg, params, config=fleet_config(), mesh=mesh, replicas=3)
+
+
+def test_make_serving_mesh_validates_axes():
+    with pytest.raises(ValueError, match="data"):
+        make_serving_mesh(model=1, data=0)
+    with pytest.raises(ValueError, match="model"):
+        make_serving_mesh(model=0, data=1)
+    mesh = make_serving_mesh(model=1, data=1)
+    assert tuple(mesh.axis_names) == ("data", "model")
+
+
+def test_replica_meshes_requires_serving_axes():
+    with pytest.raises(ValueError, match="data.*model"):
+        replica_meshes(jax.make_mesh((1,), ("model",)))
+
+
+def test_aggregate_sums_rates_and_merges_samples():
+    """Fleet tok/s is the sum of per-replica rates (disjoint hardware);
+    percentiles come from the union of samples, not from per-replica
+    percentiles."""
+    from repro.serve.engine import Metrics
+    a, b = Metrics(), Metrics()
+    a.decode_tokens, a.decode_time_s = 100, 2.0     # 50 tok/s
+    b.decode_tokens, b.decode_time_s = 300, 2.0     # 150 tok/s
+    a.ttft_s, b.ttft_s = [0.1, 0.2], [0.3, 0.4]
+    rep = aggregate_reports([a, b])
+    assert rep["decode_tok_s"] == 200.0
+    assert rep["decode_tokens"] == 400
+    assert rep["ttft_s"]["mean"] == pytest.approx(0.25)
+    assert rep["ttft_s"]["p50"] == pytest.approx(0.25)
+
+
+# ---------------------------------------------------------------------------
+# (data, model) mesh fleet — the `shard` CI lane (forced 8-device host)
+# ---------------------------------------------------------------------------
+
+needs_fleet_mesh = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs 8 devices for a (data=2, model=2) fleet "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+@pytest.mark.shard
+@needs_fleet_mesh
+def test_replica_meshes_carve_disjoint_device_groups():
+    mesh = make_serving_mesh(model=2, data=2)
+    groups = replica_meshes(mesh)
+    assert len(groups) == 2
+    ids = [sorted(d.id for d in g.devices.flat) for g in groups]
+    assert all(len(i) == 2 for i in ids)
+    assert not set(ids[0]) & set(ids[1])    # replicas own disjoint devices
+    assert all(tuple(g.axis_names) == ("data", "model") for g in groups)
+
+
+@pytest.mark.shard
+@needs_fleet_mesh
+def test_fleet_2x2_token_identical_to_tp2_single():
+    """The acceptance bar: a (data=2, model=2) Router — two 2-way-TP
+    packed replicas on disjoint device groups — serves token-for-token
+    identically to one (model=2) engine, greedy and seeded sampling
+    alike, with the merged fleet metrics populated."""
+    cfg = packed_cfg()
+    params = lm_params(cfg)
+    prompts = seeded_prompts(cfg, (7, 3, 11, 5, 6))
+    sampling = [None, SamplingParams(temperature=0.9, top_k=8, seed=5),
+                None, SamplingParams(temperature=0.7, seed=11), None]
+
+    econf = fleet_config(packed=True)
+    single = ServingEngine(cfg, params, config=econf,
+                           mesh=make_serving_mesh(2))
+    for i, (p, sp) in enumerate(zip(prompts, sampling)):
+        assert single.submit(Request(uid=i, prompt=p, max_new_tokens=5,
+                                     sampling=sp))
+    want = {r.uid: tuple(r.output) for r in single.run_to_completion()}
+
+    router = Router(cfg, params, config=econf,
+                    mesh=make_serving_mesh(model=2, data=2))
+    handles = [router.submit(p, sp, max_new_tokens=5,
+                             session="sess" if i == 2 else None)
+               for i, (p, sp) in enumerate(zip(prompts, sampling))]
+    router.run_to_completion()
+    assert len({h.replica for h in handles}) == 2
+    assert {h.uid: tuple(h.output) for h in handles} == want
+
+    rep = router.metrics_report()
+    fleet = rep["fleet"]
+    assert fleet["replicas"] == fleet["attached"] == 2
+    assert fleet["retired"] == 5 and fleet["rejected"] == 0
+    assert fleet["decode_tok_s"] > 0 and fleet["ttft_s"]["p95"] > 0
+    assert len(rep["replica_reports"]) == 2
+    assert router.capacity_report()["fleet_slots"] == 4

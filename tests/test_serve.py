@@ -12,6 +12,7 @@ from repro import configs
 from repro.core.quant import QuantConfig
 from repro.launch import steps as steps_lib
 from repro.models import lm
+from repro.serve.config import EngineConfig
 
 
 def float_cfg(name, **kw):
@@ -140,7 +141,8 @@ def test_serving_engine_continuous_batching():
     from repro.serve.engine import Request, ServingEngine
     cfg = float_cfg("stablelm-1.6b")
     params = lm.init_params(jax.random.PRNGKey(5), cfg)
-    eng = ServingEngine(cfg, params, max_batch=2, max_len=32, packed=False)
+    eng = ServingEngine(cfg, params, config=EngineConfig(
+        max_batch=2, max_len=32, packed=False))
     rng = np.random.default_rng(6)
     reqs = [Request(uid=i,
                     prompt=rng.integers(0, cfg.vocab_size, 4).astype(
@@ -231,8 +233,9 @@ def test_engine_sliding_window_forces_token_prefill():
                for n in (5, 3, 7)]
 
     def run(max_batch):
-        eng = ServingEngine(cfg, params, max_batch=max_batch, max_len=32,
-                            packed=False, prefill_chunk=16)
+        eng = ServingEngine(cfg, params, config=EngineConfig(
+            max_batch=max_batch, max_len=32, packed=False,
+            prefill_chunk=16))
         assert eng.prefill_chunk == 1
         for i, p in enumerate(prompts):
             assert eng.submit(Request(uid=i, prompt=p, max_new_tokens=4))
@@ -295,8 +298,9 @@ def test_engine_staggered_admission_matches_single_request(chunk):
                for n in (7, 3, 11, 5)]
 
     def run(max_batch):
-        eng = ServingEngine(cfg, params, max_batch=max_batch, max_len=32,
-                            packed=False, prefill_chunk=chunk)
+        eng = ServingEngine(cfg, params, config=EngineConfig(
+            max_batch=max_batch, max_len=32, packed=False,
+            prefill_chunk=chunk))
         for i, p in enumerate(prompts):
             assert eng.submit(Request(uid=i, prompt=p, max_new_tokens=6))
         return {r.uid: tuple(r.output) for r in eng.run_to_completion()}
@@ -314,8 +318,8 @@ def test_run_to_completion_collects_same_step_finishers():
     cfg = float_cfg("stablelm-1.6b")
     params = lm.init_params(jax.random.PRNGKey(5), cfg)
     rng = np.random.default_rng(11)
-    eng = ServingEngine(cfg, params, max_batch=2, max_len=32, packed=False,
-                        prefill_chunk=8)
+    eng = ServingEngine(cfg, params, config=EngineConfig(
+        max_batch=2, max_len=32, packed=False, prefill_chunk=8))
     for i in range(3):
         eng.submit(Request(
             uid=i, prompt=rng.integers(0, cfg.vocab_size, 3).astype(
@@ -337,8 +341,8 @@ def test_engine_per_slot_sampling():
     p1 = rng.integers(0, cfg.vocab_size, 4).astype(np.int32)
 
     def run():
-        eng = ServingEngine(cfg, params, max_batch=2, max_len=32,
-                            packed=False, prefill_chunk=4)
+        eng = ServingEngine(cfg, params, config=EngineConfig(
+            max_batch=2, max_len=32, packed=False, prefill_chunk=4))
         eng.submit(Request(uid=0, prompt=p0, max_new_tokens=5))
         eng.submit(Request(uid=1, prompt=p1, max_new_tokens=5,
                            sampling=SamplingParams(temperature=1.0,
@@ -348,8 +352,8 @@ def test_engine_per_slot_sampling():
     a, b = run(), run()
     assert a == b                                 # seeded => reproducible
 
-    eng = ServingEngine(cfg, params, max_batch=1, max_len=32, packed=False,
-                        prefill_chunk=4)
+    eng = ServingEngine(cfg, params, config=EngineConfig(
+        max_batch=1, max_len=32, packed=False, prefill_chunk=4))
     eng.submit(Request(uid=0, prompt=p0, max_new_tokens=5))
     solo = eng.run_to_completion()[0]
     assert a[0] == tuple(solo.output)             # greedy slot unperturbed
@@ -362,8 +366,9 @@ def test_engine_backpressure_and_metrics():
     rng = np.random.default_rng(13)
     prompts = [rng.integers(0, cfg.vocab_size, 5).astype(np.int32)
                for _ in range(3)]
-    eng = ServingEngine(cfg, params, max_batch=1, max_len=32, packed=False,
-                        prefill_chunk=4, max_queue=2)
+    eng = ServingEngine(cfg, params, config=EngineConfig(
+        max_batch=1, max_len=32, packed=False, prefill_chunk=4,
+        max_queue=2))
     assert eng.submit(Request(uid=0, prompt=prompts[0], max_new_tokens=2))
     assert eng.submit(Request(uid=1, prompt=prompts[1], max_new_tokens=2))
     assert not eng.submit(Request(uid=2, prompt=prompts[2],

@@ -25,6 +25,7 @@ from repro.core.quant import QuantConfig
 from repro.launch.mesh import make_host_mesh, make_serving_mesh
 from repro.models import lm
 from repro.parallel import sharding
+from repro.serve.config import EngineConfig
 from repro.serve.engine import Request, ServingEngine
 from repro.serve.shard import ShardPlan
 
@@ -45,8 +46,8 @@ def packed_cfg(name="stablelm-1.6b", w_bits=2, kv_bits=4, **kw):
 
 
 def run_engine(cfg, params, mesh, *, prompts, max_new=5, **kw):
-    eng = ServingEngine(cfg, params, max_batch=2, max_len=32, packed=True,
-                        prefill_chunk=4, mesh=mesh, **kw)
+    eng = ServingEngine(cfg, params, mesh=mesh, config=EngineConfig(
+        max_batch=2, max_len=32, packed=True, prefill_chunk=4, **kw))
     for i, p in enumerate(prompts):
         assert eng.submit(Request(uid=i, prompt=p, max_new_tokens=max_new))
     return eng, {r.uid: tuple(r.output) for r in eng.run_to_completion()}
@@ -229,8 +230,9 @@ def test_sharded_plans_cover_dispatch_signatures():
     from repro.kernels import plan as plan_lib
     cfg = packed_cfg()
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
-    eng = ServingEngine(cfg, params, max_batch=2, max_len=32, packed=True,
-                        prefill_chunk=4, mesh=make_serving_mesh(4))
+    eng = ServingEngine(cfg, params, mesh=make_serving_mesh(4),
+                        config=EngineConfig(max_batch=2, max_len=32,
+                                            packed=True, prefill_chunk=4))
     spec = PackSpec.from_config(cfg.quant)
     node = eng.params["layers"][0]["attn"]["q"]
     kp, n_global = node["w_packed"].shape      # sharded arrays: global shape
