@@ -14,6 +14,11 @@
   cache converts bit density into admission capacity (slots scale with the
   bytes shrink), the serving-side analogue of the paper's sub-byte storage
   thesis.
+* ``run_paged`` — paged, prefix-sharing KV cache (serve/pages.py,
+  DESIGN.md §18) vs the slot-contiguous cache under one fixed HBM budget
+  on a 64-token shared-prefix workload: peak concurrent sequences,
+  prefix-share ratio, COW/page counters, and token identity.  Report-only
+  by metric naming; tests/test_paged_kv.py gates the semantics.
 * ``run_sharded`` — tensor-parallel packed engine (serve/shard.ShardPlan,
   DESIGN.md §15) vs the single-device engine on the same requests.
   Report-only (CPU-simulated meshes measure collective overhead, not TP
@@ -302,6 +307,100 @@ def run_kv_cache(quick: bool = False):
     return rows
 
 
+def run_paged(quick: bool = False):
+    """Paged, prefix-sharing KV cache vs the slot-contiguous cache under
+    ONE fixed HBM budget on a shared-prefix workload (DESIGN.md §18).
+
+    Every request shares a 64-token prefix and adds a short unique tail —
+    the system-prompt shape paging exists for.  The unpaged engine sizes
+    whole ``max_len`` slots from the budget (4 here); the paged engine
+    spends the same bytes on a 4-bit page pool, primes the prefix cache
+    with one warmup request, then admits every follow-up at ~2 fresh
+    pages apiece — ``peak_live_slot_count`` / ``logical_slot_multiplier``
+    show concurrent sequences at >= 2x the unpaged slot count, and
+    ``prompt_rows_computed`` shows the prefill work the radix cache
+    skipped.  Report-only by metric naming (counters and ratios carry no
+    gated suffix); tests/test_paged_kv.py gates the token-identity and
+    capacity semantics.
+    """
+    from repro import configs
+    from repro.core.quant import QuantConfig
+    from repro.models import lm
+    from repro.serve.config import EngineConfig
+    from repro.serve.engine import Metrics, Request, ServingEngine
+    from repro.serve.prepare import cache_bytes_per_slot
+
+    base = configs.get_config("stablelm-1.6b", reduced=True).replace(
+        param_dtype="float32", compute_dtype="float32", head_dim=64,
+        quant=QuantConfig(enabled=False, kv_bits=4))
+    params = lm.init_params(jax.random.PRNGKey(0), base)
+    page_size, max_len = 16, 80
+    budget = 4 * cache_bytes_per_slot(base, max_len)
+    n_req, new_tokens = 12, 2 if quick else 4
+    tail_len = 4
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(0, base.vocab_size, PROMPT_LEN).astype(np.int32)
+    prompts = [np.concatenate([prefix, rng.integers(
+        0, base.vocab_size, tail_len).astype(np.int32)])
+        for _ in range(n_req)]
+
+    def bench(econf, warm_prefix):
+        eng = ServingEngine(base, params, config=econf)
+        # warmup compiles both steps; for the paged engine it also primes
+        # the radix prefix cache (a system prompt being cached once)
+        eng.submit(Request(uid=10_000,
+                           prompt=prefix if warm_prefix else prompts[0],
+                           max_new_tokens=2))
+        eng.run_to_completion()
+        eng.metrics = Metrics()
+        if warm_prefix:
+            eng.peak_live_slots = 0
+        for i, p in enumerate(prompts):
+            eng.submit(Request(uid=i, prompt=p, max_new_tokens=new_tokens))
+        outs = {r.uid: tuple(r.output) for r in eng.run_to_completion()}
+        return eng.metrics.report(), eng.capacity_report(), outs
+
+    unpaged_rep, unpaged_cap, unpaged_out = bench(
+        EngineConfig(max_len=max_len, packed=False, prefill_chunk=16,
+                     hbm_cache_budget=budget), warm_prefix=False)
+    paged_rep, paged_cap, paged_out = bench(
+        EngineConfig(max_batch=16, max_len=max_len, packed=False,
+                     prefill_chunk=16, hbm_cache_budget=budget,
+                     paged=True, page_size=page_size), warm_prefix=True)
+
+    total_prompt = sum(len(p) for p in prompts)
+    rows = [{
+        "case": "kv-paged/unpaged",
+        "kv_bits": 4, "requests": n_req, "shared_prefix_len": PROMPT_LEN,
+        "logical_slot_capacity": unpaged_cap["slots"],
+        "peak_live_slot_count": unpaged_cap["slots"],
+        "logical_slot_multiplier": 1.0,
+        "prompt_rows_computed": unpaged_rep["prefill_tokens"],
+        "prefix_share_ratio": 0.0,
+        "tokens_match": True,
+    }, {
+        "case": "kv-paged/paged",
+        "kv_bits": 4, "requests": n_req, "shared_prefix_len": PROMPT_LEN,
+        "logical_slot_capacity": paged_cap["slots"],
+        "peak_live_slot_count": paged_cap["peak_live_slot_count"],
+        "logical_slot_multiplier": round(
+            paged_cap["peak_live_slot_count"] / unpaged_cap["slots"], 2),
+        "prompt_rows_computed": paged_rep["prefill_tokens"],
+        "prefix_share_ratio": round(
+            paged_cap["prefix_hit_tokens"] / total_prompt, 3),
+        "tokens_match": paged_out == unpaged_out,
+        "num_pages": paged_cap["num_pages"],
+        "bytes_per_page": paged_cap["page_bytes"],
+        "cached_prefix_pages": paged_cap["cached_prefix_pages"],
+        "cow_copies": paged_cap["cow_copies"],
+    }]
+    emit(rows, ["case", "kv_bits", "requests", "shared_prefix_len",
+                "logical_slot_capacity", "peak_live_slot_count",
+                "logical_slot_multiplier", "prompt_rows_computed",
+                "prefix_share_ratio", "tokens_match"])
+    return rows
+
+
 def run_sharded(quick: bool = False):
     """Sharded-vs-single-device packed engine throughput (report-only).
 
@@ -429,6 +528,7 @@ def run(quick: bool = False):
     return {"linear": run_linear(quick),
             "engine": run_engine(quick),
             "kv_cache": run_kv_cache(quick),
+            "paged": run_paged(quick),
             "sharded": run_sharded(quick),
             "router": run_router(quick)}
 

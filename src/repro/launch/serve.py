@@ -75,8 +75,22 @@ def build_parser() -> argparse.ArgumentParser:
                           "come back cache-backed on later launches)")
     eng.add_argument("--hbm-cache-budget-mb", type=float, default=0,
                      help="size batch slots from this HBM cache budget "
-                          "(slots = budget // cache bytes per slot) "
-                          "instead of --max-batch")
+                          "(slots = budget // cache bytes per slot; with "
+                          "--paged-kv, pages = budget // page bytes) "
+                          "instead of --max-batch (0 = no budget)")
+    eng.add_argument("--paged-kv", action="store_true",
+                     help="paged KV cache: block-table indirection over a "
+                          "refcounted page pool with prefix sharing and "
+                          "copy-on-write (serve/pages.py, DESIGN.md §18); "
+                          "the HBM budget then buys pages, --max-batch "
+                          "bounds logical slots")
+    eng.add_argument("--page-size", type=int, default=16,
+                     help="token rows per KV page; must be a multiple of "
+                          "the kv-bits word-packing tail (8 for 4-bit, 16 "
+                          "for 2-bit)")
+    eng.add_argument("--no-prefix-sharing", action="store_true",
+                     help="disable radix prefix sharing across paged "
+                          "requests (pages still allocated on demand)")
 
     samp = ap.add_argument_group("sampling")
     samp.add_argument("--temperature", type=float, default=0.0,

@@ -160,10 +160,16 @@ def make_decode_step(cfg, *, kv_shard_axis: str | None = None):
     the KV-cache kv-head axis over (None = single-device serving); the
     attention write path constrains its quantize/pack/scatter to stay
     head-local on that axis (DESIGN.md §15).
+
+    A paged engine additionally passes ``block_tables`` [B, n_pages]
+    (host-side numpy, replicated under a mesh) and paged pool caches;
+    omitting it keeps the slot-contiguous path byte-for-byte unchanged
+    (DESIGN.md §18).
     """
     qmode = quant_mode_for(cfg, "decode")
 
-    def decode_step(params, caches, batch, index, valid=None):
+    def decode_step(params, caches, batch, index, valid=None,
+                    block_tables=None):
         b = batch["tokens"].shape[0]
         dec = dict(batch)
         idx = jnp.asarray(index, jnp.int32)
@@ -174,7 +180,8 @@ def make_decode_step(cfg, *, kv_shard_axis: str | None = None):
         logits, _, caches = lm.forward(params, cfg, dec, quant_mode=qmode,
                                        caches=caches, cache_index=idx,
                                        cache_valid=valid,
-                                       kv_shard_axis=kv_shard_axis)
+                                       kv_shard_axis=kv_shard_axis,
+                                       block_tables=block_tables)
         return logits[:, -1], caches
 
     return decode_step
@@ -193,7 +200,8 @@ def make_prefill_chunk_step(cfg, *, kv_shard_axis: str | None = None):
     """
     qmode = quant_mode_for(cfg, "prefill_chunk")
 
-    def prefill_chunk_step(params, caches, batch, index, valid):
+    def prefill_chunk_step(params, caches, batch, index, valid,
+                           block_tables=None):
         b, c = batch["tokens"].shape
         dec = dict(batch)
         idx = jnp.asarray(index, jnp.int32)
@@ -202,7 +210,8 @@ def make_prefill_chunk_step(cfg, *, kv_shard_axis: str | None = None):
         logits, _, caches = lm.forward(params, cfg, dec, quant_mode=qmode,
                                        caches=caches, cache_index=idx,
                                        cache_valid=vld,
-                                       kv_shard_axis=kv_shard_axis)
+                                       kv_shard_axis=kv_shard_axis,
+                                       block_tables=block_tables)
         last = jnp.clip(vld - 1, 0, c - 1)
         return (jnp.take_along_axis(logits, last[:, None, None],
                                     axis=1)[:, 0], caches)

@@ -79,6 +79,53 @@ def init_kv_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
     }
 
 
+def init_paged_kv_cache(cfg, num_pages, page_size, dtype=jnp.bfloat16):
+    """Paged KV pool: ``num_pages`` pages of ``page_size`` token rows.
+
+    Same per-row layouts as :func:`init_kv_cache` with the slot-contiguous
+    ``[B, S, ...]`` leading dims replaced by ``[P, page_size, ...]`` — the
+    kv-head axis stays axis 2, so the serving kv-head shardings
+    (DESIGN.md §15) apply to pools unchanged while the page axis
+    replicates.  One page-id space serves every attention layer: layer
+    ``i``'s pool is indexed by the same block tables (serve/pages.py).
+    Sub-byte layouts additionally require ``page_size`` to be a multiple
+    of the word-packing tail (serve/pages.validate_page_size) so each
+    page holds whole int32 words and dequantizes independently; the
+    per-(pos, kv-head) scale planes page alongside the words.
+
+    Sliding-window archs keep the unpaged ring (ring slot reuse and page
+    indirection do not compose; the engine rejects the combination).
+    """
+    if cfg.sliding_window:
+        raise ValueError(
+            "paged KV cache does not support sliding-window ring caches; "
+            "serve sliding-window archs unpaged")
+    hd = cfg.resolved_head_dim
+    kvh = cfg.num_kv_heads
+    bits = getattr(cfg.quant, "kv_bits", 0)
+    if bits == 8:
+        return {
+            "k": jnp.zeros((num_pages, page_size, kvh, hd), jnp.int8),
+            "v": jnp.zeros((num_pages, page_size, kvh, hd), jnp.int8),
+            "k_scale": jnp.zeros((num_pages, page_size, kvh), jnp.bfloat16),
+            "v_scale": jnp.zeros((num_pages, page_size, kvh), jnp.bfloat16),
+        }
+    if bits in (4, 2):
+        hd_words = -(-hd // (32 // bits))
+        return {
+            "k": jnp.zeros((num_pages, page_size, kvh, hd_words), jnp.int32),
+            "v": jnp.zeros((num_pages, page_size, kvh, hd_words), jnp.int32),
+            "k_scale": jnp.zeros((num_pages, page_size, kvh), jnp.bfloat16),
+            "v_scale": jnp.zeros((num_pages, page_size, kvh), jnp.bfloat16),
+        }
+    if bits not in (0, 16):
+        raise ValueError(f"unsupported kv_bits {bits}; expected 0/16/8/4/2")
+    return {
+        "k": jnp.zeros((num_pages, page_size, kvh, hd), dtype),
+        "v": jnp.zeros((num_pages, page_size, kvh, hd), dtype),
+    }
+
+
 def _kv_quantize(x, bits=8):
     """[B,S,KVH,hd] float -> (stored lattice, bf16 per-(pos,head) scales).
 
@@ -204,11 +251,28 @@ def _constrain_kv_heads(tree, axis):
     return one(tree)
 
 
+def _attention_epilogue(p, cfg, q, kv_fn, mask_fn, positions, q_chunk,
+                        skv, kv_bits, new_cache, qm):
+    """Shared attention tail: positions broadcast, autotuned q-chunk
+    lookup, the q-chunked softmax, and the output projection."""
+    b, sq, h, hd = q.shape
+    if positions.ndim == 1:
+        positions = jnp.broadcast_to(positions[None, :], (b, sq))
+    if q_chunk is None:
+        from repro.kernels import autotune  # trace-time lookup, static ints
+        q_chunk = autotune.attention_chunk_for(
+            b, sq, int(skv), cfg.num_heads, cfg.num_kv_heads, hd,
+            int(kv_bits))
+    out = _chunked_attention(q, kv_fn, mask_fn, positions, q_chunk)
+    out = dense_apply(p["o"], out.reshape(b, sq, h * hd), **qm)
+    return out, new_cache
+
+
 def attention_apply(p, cfg, x, *, positions, quant_mode="none",
                     cache=None, cache_index=None, cache_valid=None,
                     kv_x=None, kv_positions=None, causal=True,
                     positions3=None, q_chunk=None, cross_kv=None,
-                    kv_shard_axis=None):
+                    kv_shard_axis=None, block_tables=None):
     """Full attention forward.
 
     ``q_chunk=None`` consults the autotune cache for the fused-attention
@@ -228,6 +292,15 @@ def attention_apply(p, cfg, x, *, positions, quant_mode="none",
         cache (0 = dead slot, fully masked).
       * cross-attention: kv_x (encoder states) given; non-causal, no RoPE
         ring-buffer concerns.
+      * paged decode: ``block_tables`` [B, n_pages] maps each row's
+        logical page j to a physical page of a pooled cache
+        ([P, page_size, KVH, ...], init_paged_kv_cache).  Writes scatter
+        through the table; reads gather the row's pages back into a
+        logical [B, n_pages*page_size, ...] view INSIDE the q-chunk body,
+        so fused sub-byte dequant is preserved bit-exactly (positions the
+        mask admits hold values identical to the unpaged ring, and masked
+        rows contribute exactly-zero probability).  Vector cache_index
+        only; sliding-window archs stay unpaged (DESIGN.md §18).
     """
     b, sq, _ = x.shape
     hd = cfg.resolved_head_dim
@@ -265,8 +338,50 @@ def attention_apply(p, cfg, x, *, positions, quant_mode="none",
         # pinned to the kv-head shard axis (no-op when axis is None)
         k = _constrain_kv_heads(k, kv_shard_axis)
         v = _constrain_kv_heads(v, kv_shard_axis)
-        size = cache["k"].shape[1]
         idx = jnp.asarray(cache_index)
+        if block_tables is not None:
+            # ---- paged pool: scatter/gather through the block table ----
+            if window:
+                raise NotImplementedError(
+                    "paged KV cache + sliding-window ring do not compose; "
+                    "serve sliding-window archs unpaged")
+            if idx.ndim == 0:
+                raise NotImplementedError(
+                    "paged decode is vector-indexed (per-slot positions); "
+                    "pass cache_index as a [B] array")
+            bt = jnp.asarray(block_tables, jnp.int32)
+            page_rows = cache["k"].shape[1]
+            size = bt.shape[1] * page_rows     # logical view length
+            vlen = (jnp.full((b,), sq, jnp.int32) if cache_valid is None
+                    else jnp.asarray(cache_valid, jnp.int32))
+            offs = jnp.arange(sq, dtype=jnp.int32)
+            wpos = idx[:, None] + offs[None, :]                # [B, sq]
+            page_idx = jnp.clip(wpos // page_rows, 0, bt.shape[1] - 1)
+            phys = jnp.take_along_axis(bt, page_idx, axis=1)
+            new_cache = _cache_write_paged(
+                cache, k, v, phys, wpos % page_rows,
+                offs[None, :] < vlen[:, None], kv_bits)
+            # logical row j of the gathered view holds absolute position
+            # j by construction (page j // page_rows, row j % page_rows),
+            # so the unpaged no-window position map applies verbatim
+            kv_pos = _ring_positions_batch(idx + vlen - 1, size,
+                                           0)                  # [B, size]
+            new_cache = _constrain_kv_heads(new_cache, kv_shard_axis)
+            read_cache, kv_dtype = new_cache, k.dtype
+            kv_fn = lambda: _paged_cache_read(read_cache, bt, kv_dtype,
+                                              kv_bits, hd)
+
+            def mask_fn(qpos):
+                kp = kv_pos[:, None, :]
+                m = kp <= qpos[:, :, None]
+                m &= kp >= 0
+                return m
+
+            kv_view_len = size
+            return _attention_epilogue(p, cfg, q, kv_fn, mask_fn,
+                                       positions, q_chunk, kv_view_len,
+                                       kv_bits, new_cache, qm)
+        size = cache["k"].shape[1]
         if idx.ndim == 0:
             # lockstep scalar path: every row writes the same slot
             slot = idx % size if window else idx
@@ -344,18 +459,10 @@ def attention_apply(p, cfg, x, *, positions, quant_mode="none",
                     m &= (qpos[:, :, None] - kp) < window
                 return m
 
-    if positions.ndim == 1:
-        positions = jnp.broadcast_to(positions[None, :], (b, sq))
-    if q_chunk is None:
-        from repro.kernels import autotune  # trace-time lookup, static ints
-        skv = (cache["k"].shape[1] if cache is not None
-               and cache_index is not None else k.shape[1])
-        q_chunk = autotune.attention_chunk_for(
-            b, sq, int(skv), cfg.num_heads, cfg.num_kv_heads, hd,
-            int(kv_bits))
-    out = _chunked_attention(q, kv_fn, mask_fn, positions, q_chunk)
-    out = dense_apply(p["o"], out.reshape(b, sq, cfg.num_heads * hd), **qm)
-    return out, new_cache
+    skv = (cache["k"].shape[1] if cache is not None
+           and cache_index is not None else k.shape[1])
+    return _attention_epilogue(p, cfg, q, kv_fn, mask_fn, positions,
+                               q_chunk, skv, kv_bits, new_cache, qm)
 
 
 def _cache_write(cache, k, v, slot, kv_bits=0):
@@ -399,6 +506,45 @@ def _cache_write_ragged(cache, k, v, slots, valid, kv_bits=0):
                 "k_scale": put(cache["k_scale"], sk),
                 "v_scale": put(cache["v_scale"], sv)}
     return {"k": put(cache["k"], k), "v": put(cache["v"], v)}
+
+
+def _cache_write_paged(cache, k, v, pages, rows, valid, kv_bits=0):
+    """Block-table scatter: token j of row b lands at physical page
+    ``pages[b, j]``, row ``rows[b, j]`` of the pool.  Invalid tokens are
+    redirected past the pool (scatter ``mode='drop'``), exactly like the
+    ragged ring write.  Quantization/word-packing happen per incoming
+    token row, so the stored words and scale planes are value-identical
+    to the unpaged layout at the same absolute positions."""
+    num_pages = cache["k"].shape[0]
+    tgt = jnp.where(valid, pages, num_pages)
+
+    def put(buf, val):
+        return buf.at[tgt, rows].set(val.astype(buf.dtype), mode="drop")
+
+    if "k_scale" in cache:
+        qk, sk = _kv_quantize(k, kv_bits)
+        qv, sv = _kv_quantize(v, kv_bits)
+        return {"k": put(cache["k"], qk), "v": put(cache["v"], qv),
+                "k_scale": put(cache["k_scale"], sk),
+                "v_scale": put(cache["v_scale"], sv)}
+    return {"k": put(cache["k"], k), "v": put(cache["v"], v)}
+
+
+def _paged_cache_read(cache, block_tables, dtype, kv_bits=0, hd=None):
+    """Gather each row's pages into the logical [B, n_pages*ps, KVH, ...]
+    view and dequantize.  Called inside the q-chunk body (kv_fn), so the
+    gather + fused unpack/dequant stay per chunk — the full-precision
+    cache never exists whole, same as the unpaged read path."""
+    def gather(buf):
+        g = buf[block_tables]                # [B, n_pages, ps, KVH, ...]
+        return g.reshape(g.shape[0], -1, *g.shape[3:])
+
+    if "k_scale" in cache:
+        return (_kv_dequantize(gather(cache["k"]), gather(cache["k_scale"]),
+                               dtype, kv_bits, hd),
+                _kv_dequantize(gather(cache["v"]), gather(cache["v_scale"]),
+                               dtype, kv_bits, hd))
+    return gather(cache["k"]), gather(cache["v"])
 
 
 def _ring_positions_batch(last, size, window):

@@ -55,14 +55,16 @@ def block_init(key, cfg, i, *, cross=False, dtype=jnp.float32):
 def block_apply(p, cfg, x, *, kind="attn", positions, quant_mode="none",
                 cache=None, cache_index=None, cache_valid=None, causal=True,
                 positions3=None, enc_kv=None, moe_path="einsum",
-                kv_shard_axis=None):
+                kv_shard_axis=None, block_tables=None):
     """One residual block.  Returns (x, new_cache, aux_loss).
 
     ``cache_index`` may be a scalar (lockstep decode) or a [B] vector of
     per-slot write offsets; ``cache_valid`` [B] counts each row's valid-
     prefix tokens for ragged windows (DESIGN.md §12).  ``kv_shard_axis``
     names the mesh axis a serving ShardPlan sharded the KV-cache kv-head
-    axis over (DESIGN.md §15); None = unsharded serving.
+    axis over (DESIGN.md §15); None = unsharded serving.  ``block_tables``
+    [B, n_pages] selects the paged attention cache path (pool + per-slot
+    block table, DESIGN.md §18); recurrent sub-caches stay per-slot.
     """
     aux = 0.0
     new_cache = dict(cache) if cache is not None else None
@@ -73,7 +75,7 @@ def block_apply(p, cfg, x, *, kind="attn", positions, quant_mode="none",
             p["attn"], cfg, h, positions=positions, quant_mode=quant_mode,
             cache=sub, cache_index=cache_index, cache_valid=cache_valid,
             causal=causal, positions3=positions3,
-            kv_shard_axis=kv_shard_axis)
+            kv_shard_axis=kv_shard_axis, block_tables=block_tables)
         if new_cache is not None and sub2 is not None:
             new_cache["attn"] = sub2
     elif kind == "mamba":
@@ -183,7 +185,7 @@ def _decoder_inputs(params, cfg, batch):
 
 def forward(params, cfg, batch, *, quant_mode="none", caches=None,
             cache_index=None, cache_valid=None, enc_out=None, remat=False,
-            moe_path="einsum", kv_shard_axis=None):
+            moe_path="einsum", kv_shard_axis=None, block_tables=None):
     """Full forward.  Returns (logits, aux_loss, new_caches).
 
     ``cache_index`` scalar = lockstep decode; [B] vector = per-slot cache
@@ -191,7 +193,9 @@ def forward(params, cfg, batch, *, quant_mode="none", caches=None,
     per-row valid-prefix length of the current window (chunked prefill).
     ``kv_shard_axis`` (serving TP, DESIGN.md §15) pins attention's KV-cache
     quantize/pack/write to the kv-head shard axis so GSPMD never reshards
-    the cache between steps.
+    the cache between steps.  ``block_tables`` [B, n_pages] routes every
+    attention layer through the paged cache pool (DESIGN.md §18); the one
+    table indexes all layers' pools.
     """
     import os
     seq_ax = "model" if os.environ.get("REPRO_SEQ_ACT", "0") == "1" \
@@ -214,7 +218,8 @@ def forward(params, cfg, batch, *, quant_mode="none", caches=None,
             blk, cfg, x, kind=kind, positions=positions,
             quant_mode=quant_mode, cache=sub, cache_index=cache_index,
             cache_valid=cache_valid, causal=True, positions3=positions3,
-            enc_kv=enc_kv, moe_path=moe_path, kv_shard_axis=kv_shard_axis)
+            enc_kv=enc_kv, moe_path=moe_path, kv_shard_axis=kv_shard_axis,
+            block_tables=block_tables)
 
     for li, blk in enumerate(params["layers"]):
         if cfg.is_encoder_decoder:
@@ -261,14 +266,26 @@ def forward(params, cfg, batch, *, quant_mode="none", caches=None,
     return logits, aux_total, new_caches
 
 
-def init_caches(cfg, batch_size, max_len, dtype=jnp.bfloat16):
-    """Per-layer decode caches sized for max_len (ring-bounded for SWA)."""
+def init_caches(cfg, batch_size, max_len, dtype=jnp.bfloat16, *,
+                page_size=None, num_pages=None):
+    """Per-layer decode caches sized for max_len (ring-bounded for SWA).
+
+    With ``page_size``/``num_pages`` the attention caches are paged pools
+    ([num_pages, page_size, KVH, ...], one shared page-id space across
+    layers, DESIGN.md §18) instead of slot-contiguous rings; recurrent
+    sub-caches (mamba/xLSTM) keep their ``batch_size`` slot rows either
+    way — only attention KV pages."""
+    paged = num_pages is not None
+    if paged and page_size is None:
+        raise ValueError("num_pages requires page_size")
     caches = []
     for i in range(cfg.num_layers):
         kind = cfg.layer_kind(i)
         if kind == "attn":
-            c = {"attn": attention.init_kv_cache(cfg, batch_size, max_len,
-                                                 dtype)}
+            c = {"attn": attention.init_paged_kv_cache(
+                cfg, num_pages, page_size, dtype) if paged
+                else attention.init_kv_cache(cfg, batch_size, max_len,
+                                             dtype)}
         elif kind == "mamba":
             c = {"mamba": mamba.init_mamba_cache(cfg, batch_size)}
         elif kind == "mlstm":
@@ -290,6 +307,26 @@ def cache_bytes(cfg, batch_size, max_len, dtype=jnp.bfloat16) -> int:
     capacity (DESIGN.md §13)."""
     shapes = jax.eval_shape(
         lambda: init_caches(cfg, batch_size, max_len, dtype=dtype))
+    return sum(leaf.size * jnp.dtype(leaf.dtype).itemsize
+               for leaf in jax.tree.leaves(shapes))
+
+
+def cache_page_bytes(cfg, page_size, dtype=jnp.bfloat16) -> int:
+    """HBM bytes ONE pool page occupies summed across attention layers.
+
+    The paged-serving capacity unit (DESIGN.md §18): the engine's HBM
+    budget buys ``budget // cache_page_bytes`` pages.  Abstract-evals a
+    one-page pool so the number tracks whatever layout
+    ``cfg.quant.kv_bits`` selects (words + scale planes included).
+    Recurrent layers contribute nothing — their per-slot states are not
+    paged.  Returns 0 for attention-free stacks (the engine rejects
+    paging those)."""
+    def build():
+        return [attention.init_paged_kv_cache(cfg, 1, page_size, dtype)
+                for i in range(cfg.num_layers)
+                if cfg.layer_kind(i) == "attn"]
+
+    shapes = jax.eval_shape(build)
     return sum(leaf.size * jnp.dtype(leaf.dtype).itemsize
                for leaf in jax.tree.leaves(shapes))
 

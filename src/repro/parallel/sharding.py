@@ -275,7 +275,7 @@ def batch_shardings(batch, cfg, mesh: Mesh, global_batch: int):
 
 def cache_shardings(caches, cfg, mesh: Mesh, global_batch: int,
                     sequence_parallel: bool = False,
-                    kv_head_shard: bool = False):
+                    kv_head_shard: bool = False, paged: bool = False):
     """KV/state cache sharding.  decode_32k: batch over DP.  long_500k
     (batch=1): sequence over 'data' (SP) and head_dim over 'model'.
 
@@ -289,9 +289,18 @@ def cache_shardings(caches, cfg, mesh: Mesh, global_batch: int,
     head shard holds whole, locally-decodable words.  Head-dim sharding
     (the training default below) would instead split words across devices
     for packed caches and replicate the cache whenever kv_heads < axis
-    size."""
+    size.
+
+    ``paged=True`` (with ``kv_head_shard``) is the same layout over a page
+    pool (DESIGN.md §18): attention leaves are ``[P, page_size, KVH, ...]``
+    — the kv-head axis is still axis 2, so the 'model' shard rule carries
+    over unchanged, but the leading *page* axis replicates rather than
+    taking the batch axis: pages are a shared physical resource every
+    slot's block table may reference, not per-sequence rows."""
     bp = batch_pspec(cfg, mesh, global_batch)
     bp0 = bp[0] if len(bp) else None
+    if paged:
+        bp0 = None
 
     import os
     seq_shard = os.environ.get("REPRO_KV_SEQ_SHARD", "0") == "1"

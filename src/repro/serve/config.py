@@ -10,15 +10,15 @@ construct identically.
 
 Validation lives in ``__post_init__`` so a bad config fails at
 construction, before any params are packed or steps jitted; the HBM
-budget -> slot-count math, which used to live inline in the engine
-constructor, is :meth:`slots_for` so the capacity rule is testable without
-building an engine.
+budget -> capacity math, which used to live inline in the engine
+constructor, is :meth:`slots_for` (slot-contiguous caches) /
+:meth:`pages_for` (paged pools, DESIGN.md §18) so the capacity rules are
+testable without building an engine.
 
-Legacy keyword construction (``ServingEngine(cfg, params, max_batch=4,
-...)``) still works for one release through a ``DeprecationWarning`` shim
-that forwards to :meth:`from_legacy_kwargs`, which preserves the old
-clamping semantics (e.g. ``prefill_chunk=0`` silently clamped to 1 where
-the new validation raises).
+The PR 7 legacy-keyword shim (``ServingEngine(cfg, params, max_batch=4,
+...)`` with a DeprecationWarning) completed its one-release grace period
+and is gone: engine keywords now raise ``TypeError`` pointing at
+``EngineConfig``.
 """
 
 from __future__ import annotations
@@ -51,24 +51,13 @@ class SamplingParams:
 class EngineConfig:
     """Frozen construction config for one :class:`ServingEngine`.
 
-    Field mapping from the legacy keyword surface (the deprecation shim
-    forwards one-to-one; migration table in DESIGN.md §17):
-
-    ==================  =====================================
-    legacy kwarg        EngineConfig field
-    ==================  =====================================
-    max_batch           max_batch
-    max_len             max_len
-    packed              packed
-    greedy              folded into ``sampling`` (greedy=False
-                        became SamplingParams(temperature=1.0))
-    dense_store         dense_store
-    prefill_chunk       prefill_chunk (now validated >= 1)
-    max_queue           max_queue
-    sampling            sampling (never None; default greedy)
-    hbm_cache_budget    hbm_cache_budget
-    autotune            autotune
-    ==================  =====================================
+    One field per engine knob; programmatic callers, the CLI
+    (:meth:`from_args`), and the Router all construct through this class.
+    The paged trio (``paged`` / ``page_size`` / ``prefix_sharing``) selects
+    the block-table KV cache of DESIGN.md §18: the HBM budget then buys
+    *pages* (:meth:`pages_for`) instead of whole max_len slots
+    (:meth:`slots_for`), and ``max_batch`` bounds concurrent logical slots
+    rather than physical cache rows.
     """
 
     max_batch: int = 4
@@ -80,6 +69,9 @@ class EngineConfig:
     sampling: SamplingParams = SamplingParams()
     hbm_cache_budget: int | None = None
     autotune: bool = False
+    paged: bool = False
+    page_size: int = 16
+    prefix_sharing: bool = True
 
     def __post_init__(self):
         if self.max_batch < 1:
@@ -109,6 +101,9 @@ class EngineConfig:
             raise ValueError(
                 "autotune warm-tunes the packed kernel signatures; it "
                 "requires packed=True")
+        if self.page_size < 1:
+            raise ValueError(
+                f"page_size must be >= 1, got {self.page_size}")
 
     # ------------------------------------------------------------------
     # Capacity math (moved out of ServingEngine.__init__, DESIGN.md §13)
@@ -132,6 +127,24 @@ class EngineConfig:
                 f"{self.max_len})")
         return slots
 
+    def pages_for(self, page_bytes: int, pages_per_slot: int) -> int:
+        """Physical page count: the paged-pool capacity rule (DESIGN.md §18).
+
+        With no budget the pool is sized so ``max_batch`` worst-case
+        (no-sharing, full-extent) slots fit; with one, the budget buys
+        ``budget // bytes-per-page`` pages.  Either way the pool must hold
+        at least one worst-case slot or no request could ever admit.
+        """
+        if self.hbm_cache_budget is None:
+            return self.max_batch * pages_per_slot
+        pages = int(self.hbm_cache_budget // page_bytes)
+        if pages < pages_per_slot:
+            raise ValueError(
+                f"hbm_cache_budget {self.hbm_cache_budget} < one worst-case "
+                f"slot's pages ({pages_per_slot} pages x {page_bytes} bytes "
+                f"at max_len {self.max_len}, page_size {self.page_size})")
+        return pages
+
     # ------------------------------------------------------------------
     # Construction paths
     # ------------------------------------------------------------------
@@ -145,6 +158,19 @@ class EngineConfig:
         an engine knob means adding a field here and a flag in the CLI's
         ``engine``/``sampling`` groups, nothing else.
         """
+        mb = getattr(args, "hbm_cache_budget_mb", None)
+        if mb is None or mb <= 0:
+            # 0 / negative are the CLI's "no budget" sentinels.  The old
+            # expression `int(mb * 2**20) or None` made any sub-megabyte
+            # budget that truncated to 0 bytes silently mean "unlimited";
+            # now only explicit non-positive values do.
+            budget = None
+        else:
+            budget = int(mb * 2**20)
+            if budget < 1:
+                raise ValueError(
+                    f"--hbm-cache-budget-mb {mb} is positive but rounds to "
+                    f"under one byte; use 0 to disable the budget")
         return cls(
             max_batch=args.max_batch,
             max_len=args.max_len,
@@ -154,27 +180,8 @@ class EngineConfig:
             max_queue=args.max_queue or None,
             sampling=SamplingParams(temperature=args.temperature,
                                     top_k=args.top_k),
-            hbm_cache_budget=int(args.hbm_cache_budget_mb * 2**20) or None,
-            autotune=args.autotune)
-
-    @classmethod
-    def from_legacy_kwargs(cls, *, max_batch: int = 4, max_len: int = 512,
-                           packed: bool = True, greedy: bool = True,
-                           dense_store: bool = False,
-                           prefill_chunk: int = 16,
-                           max_queue: int | None = None,
-                           sampling: SamplingParams | None = None,
-                           hbm_cache_budget: int | None = None,
-                           autotune: bool = False) -> "EngineConfig":
-        """The deprecation shim's target: old keyword surface, old
-        semantics (``greedy`` folded into sampling, ``prefill_chunk``
-        clamped instead of rejected).  Unknown keywords raise TypeError
-        at the call boundary exactly as the old signature did."""
-        if sampling is None:
-            sampling = SamplingParams(temperature=0.0 if greedy else 1.0)
-        return cls(
-            max_batch=max_batch, max_len=max_len, packed=packed,
-            dense_store=dense_store,
-            prefill_chunk=max(1, int(prefill_chunk)),
-            max_queue=max_queue, sampling=sampling,
-            hbm_cache_budget=hbm_cache_budget, autotune=autotune)
+            hbm_cache_budget=budget,
+            autotune=args.autotune,
+            paged=getattr(args, "paged_kv", False),
+            page_size=getattr(args, "page_size", 16),
+            prefix_sharing=not getattr(args, "no_prefix_sharing", False))

@@ -16,6 +16,13 @@ Both steps run the paper's packed integer kernels via
 prepare.prepare_serving_params (quant_mode='packed'); KernelPlans for the
 decode and prefill row counts are fixed at engine init (paper §IV: one
 execution plan per layer, chosen offline).
+
+With ``EngineConfig(paged=True)`` the slot-contiguous KV cache becomes a
+refcounted page pool behind per-slot block tables (serve/pages.py,
+DESIGN.md §18): admission reserves pages instead of max_len slots, prompt
+prefixes are shared via a radix index with copy-on-write on divergence,
+and retirement frees pages — the HBM budget then bounds *physical* pages
+while ``max_batch`` bounds *logical* slots.
 """
 
 from __future__ import annotations
@@ -23,7 +30,6 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import time
-import warnings
 from collections import deque
 
 import jax
@@ -32,9 +38,10 @@ import numpy as np
 
 from repro.launch import steps as steps_lib
 from repro.models import lm
+from repro.serve import pages as pages_lib
 from repro.serve.config import EngineConfig, SamplingParams
 from repro.serve.prepare import (build_layer_plans, cache_bytes_per_slot,
-                                 prepare_serving_params)
+                                 cache_page_bytes, prepare_serving_params)
 
 __all__ = ["EngineConfig", "Metrics", "Request", "SamplingParams",
            "ServingEngine"]
@@ -128,22 +135,15 @@ class ServingEngine:
     def __init__(self, cfg, params, *, config: EngineConfig | None = None,
                  mesh=None, **legacy):
         # One constructor path (DESIGN.md §17): a frozen, pre-validated
-        # EngineConfig.  The legacy 12-keyword surface forwards through a
-        # deprecation shim for one release; ``mesh`` stays a direct
-        # argument because it is a live placement object (devices), not
-        # serializable configuration.
+        # EngineConfig.  ``mesh`` stays a direct argument because it is a
+        # live placement object (devices), not serializable configuration.
+        # The PR 7 deprecation shim for the old 12-keyword surface served
+        # its one-release grace period and is gone.
         if legacy:
-            if config is not None:
-                raise TypeError(
-                    "pass either config=EngineConfig(...) or the legacy "
-                    f"engine keywords, not both (got {sorted(legacy)})")
-            warnings.warn(
-                "ServingEngine(max_batch=..., ...) keyword construction "
-                "is deprecated; pass config=EngineConfig(...) "
-                "(repro.serve.config).  The keyword shim will be removed "
-                "in the next release.",
-                DeprecationWarning, stacklevel=2)
-            config = EngineConfig.from_legacy_kwargs(**legacy)
+            raise TypeError(
+                f"ServingEngine no longer accepts engine keywords (got "
+                f"{sorted(legacy)}); pass config=EngineConfig(...) from "
+                f"repro.serve.config instead")
         config = config if config is not None else EngineConfig()
         self.config = config
         packed = config.packed
@@ -168,9 +168,46 @@ class ServingEngine:
         # sequences, so quantized caches (cfg.quant.kv_bits in {8, 4, 2})
         # convert their density directly into batch slots — the capacity
         # rule itself lives in EngineConfig.slots_for (DESIGN.md §13).
+        # Paged mode (DESIGN.md §18) changes the capacity unit: the budget
+        # buys a pool of pages (EngineConfig.pages_for), logical slots are
+        # bounded only by max_batch, and each admission reserves just the
+        # pages its request can actually write — shared prompt prefixes
+        # and short sequences stop stranding whole max_len slots.
+        kv_bits = getattr(cfg.quant, "kv_bits", 0)
+        self.paged = config.paged
+        self.page_size = config.page_size
         self.cache_bytes_per_slot = cache_bytes_per_slot(cfg, config.max_len)
-        max_batch = config.slots_for(self.cache_bytes_per_slot)
         self.hbm_cache_budget = config.hbm_cache_budget
+        if self.paged:
+            if cfg.sliding_window:
+                raise ValueError(
+                    "paged KV cache and the sliding-window ring layout do "
+                    "not compose (attention rejects block_tables there); "
+                    "use paged=False for sliding-window configs")
+            pages_lib.validate_page_size(self.page_size, kv_bits)
+            self.page_bytes = cache_page_bytes(cfg, self.page_size)
+            if self.page_bytes == 0:
+                raise ValueError(
+                    "paged=True requires at least one attention layer "
+                    "(nothing pageable in an attention-free stack)")
+            self.pages_per_slot = -(-config.max_len // self.page_size)
+            self.num_pages = config.pages_for(self.page_bytes,
+                                              self.pages_per_slot)
+            # admission-time estimate: what one worst-case (no-sharing,
+            # full-extent) request would pin
+            self.cache_bytes_per_slot = self.pages_per_slot * self.page_bytes
+            max_batch = config.max_batch
+            # prefix skip is only token-exact when every layer's state is
+            # reconstructible from the shared pages — i.e. a pure-attention
+            # decoder stack (recurrent layers carry unpaged per-slot state;
+            # cross-attention caches key off encoder output, not prompt
+            # ids).  Paging without sharing still works for those.
+            self._share = (config.prefix_sharing
+                           and not cfg.is_encoder_decoder
+                           and all(cfg.layer_kind(i) == "attn"
+                                   for i in range(cfg.num_layers)))
+        else:
+            max_batch = config.slots_for(self.cache_bytes_per_slot)
         self.max_batch = max_batch
         self.max_len = config.max_len
         self.prefill_chunk = config.prefill_chunk
@@ -205,11 +242,24 @@ class ServingEngine:
         self._decode, self._prefill = steps_lib.jitted_serving_steps(
             cfg, kv_shard_axis=self._tp_axis, mesh=self.mesh)
         self._queue: deque[Request] = deque()
-        self.caches = lm.init_caches(cfg, max_batch, self.max_len,
-                                     dtype=jnp.bfloat16)
+        if self.paged:
+            self.caches = lm.init_caches(cfg, max_batch, self.max_len,
+                                         dtype=jnp.bfloat16,
+                                         page_size=self.page_size,
+                                         num_pages=self.num_pages)
+            self.pool = pages_lib.PagePool(self.num_pages, self.page_size,
+                                           kv_bits)
+            self.block_tables = np.zeros((max_batch, self.pages_per_slot),
+                                         np.int32)
+            self._slot_extent = [0] * max_batch   # table entries in use
+            self._slot_spare: list = [[] for _ in range(max_batch)]
+            self.peak_live_slots = 0
+        else:
+            self.caches = lm.init_caches(cfg, max_batch, self.max_len,
+                                         dtype=jnp.bfloat16)
         if self.shard_plan is not None:
-            self.caches = self.shard_plan.place_caches(self.caches, cfg,
-                                                       max_batch)
+            self.caches = self.shard_plan.place_caches(
+                self.caches, cfg, max_batch, paged=self.paged)
         # batch-1 fresh-cache template: admission resets a slot's rows from
         # it (recurrent states have non-zero init, e.g. mLSTM m = -inf)
         self._fresh = lm.init_caches(cfg, 1, self.max_len,
@@ -274,15 +324,107 @@ class ServingEngine:
             out.append(layer)
         self.caches = out
 
+    # -- paged reservation / copy-on-write -----------------------------
+
+    def _reserve_pages(self, slot: int, req: Request) -> int | None:
+        """Reserve every page ``req`` can write, all-or-nothing.
+
+        Positions written span ``[0, W)`` with ``W = len(prompt) +
+        max_new_tokens - 1`` (the last sampled token is returned, never
+        cached).  A cached prefix match (capped at ``len(prompt) - 1``,
+        match_prefix docstring) contributes shared pages — retained, not
+        copied; fresh pages cover the rest, plus COW spares for the two
+        divergence writes a request can hit: its first write into a
+        partially-shared page, and its first generated token landing in
+        the prompt's registered tail page.  Returns the shared token
+        count, or None (nothing taken) when the pool cannot cover it —
+        the request stays queued, FIFO preserved.
+        """
+        ps = self.page_size
+        n_prompt = len(req.prompt)
+        written = n_prompt + req.max_new_tokens - 1
+        n_shared, shared = 0, []
+        if self._share:
+            n_shared, shared = self.pool.match_prefix(
+                req.prompt, max_tokens=n_prompt - 1)
+        first_partial = 1 if n_shared % ps else 0
+        fill_from = n_shared // ps + first_partial
+        fresh = -(-written // ps) - fill_from
+        tail_cow = 1 if (self._share and n_prompt % ps
+                         and written > n_prompt) else 0
+        for pg, _rows in shared:             # pin before alloc can evict
+            self.pool.retain(pg)
+        got = self.pool.alloc(fresh + first_partial + tail_cow)
+        if got is None:
+            for pg, _rows in shared:
+                self.pool.release(pg)
+            return None
+        table = self.block_tables[slot]
+        table[:] = 0
+        for i, (pg, _rows) in enumerate(shared):
+            table[i] = pg
+        table[fill_from:fill_from + fresh] = got[:fresh]
+        self._slot_extent[slot] = fill_from + fresh
+        self._slot_spare[slot] = got[fresh:]
+        if n_shared:
+            self.pool.prefix_hits += 1
+            self.pool.prefix_hit_tokens += n_shared
+        return n_shared
+
+    def _release_slot_pages(self, slot: int):
+        for p in self.block_tables[slot][:self._slot_extent[slot]]:
+            self.pool.release(int(p))
+        for p in self._slot_spare[slot]:
+            self.pool.release(int(p))
+        self.block_tables[slot][:] = 0
+        self._slot_extent[slot] = 0
+        self._slot_spare[slot] = []
+
+    def _ensure_writable(self, slot: int, lo: int, hi: int):
+        """Copy-on-write ahead of a pass writing positions ``[lo, hi)``:
+        any mapped page that is shared (ref > 1) or frozen by the prefix
+        index gets a private copy first (reserved spare, else a fresh
+        alloc under pressure), so writers never touch shared bytes."""
+        ps = self.page_size
+        table = self.block_tables[slot]
+        for pi in range(lo // ps, -(-hi // ps)):
+            pg = int(table[pi])
+            if not (self.pool.is_shared(pg) or self.pool.is_immutable(pg)):
+                continue
+            spare = self._slot_spare[slot]
+            if spare:
+                dst = spare.pop()
+            else:
+                got = self.pool.alloc(1)
+                if got is None:
+                    raise RuntimeError(
+                        f"page pool exhausted during copy-on-write for "
+                        f"slot {slot} (page {pg}); reservation math must "
+                        f"cover every divergence write")
+                dst = got[0]
+            self.caches = pages_lib.copy_page(self.caches, pg, dst)
+            table[pi] = dst
+            self.pool.release(pg)
+            self.pool.cow_copies += 1
+
     def _admit(self):
         now = time.perf_counter()
         for slot in range(self.max_batch):
             if self.slot_req[slot] is None and self._queue:
-                req = self._queue.popleft()
+                req = self._queue[0]
+                n_shared = 0
+                if self.paged:
+                    reserved = self._reserve_pages(slot, req)
+                    if reserved is None:
+                        # head-of-line blocks until pages free: FIFO, no
+                        # starvation of large requests by small ones
+                        break
+                    n_shared = reserved
+                self._queue.popleft()
                 self._reset_slot(slot)
                 self.slot_req[slot] = req
-                self.slot_pos[slot] = 0
-                self.slot_fed[slot] = 0
+                self.slot_pos[slot] = n_shared
+                self.slot_fed[slot] = n_shared
                 sp = req.sampling or self.sampling
                 self._slot_rng[slot] = np.random.default_rng(
                     (sp.seed, req.uid & 0xFFFFFFFF))
@@ -306,6 +448,8 @@ class ServingEngine:
         self.metrics.steps += 1
         self.metrics.slot_steps_live += len(live)
         self.metrics.slot_steps_total += self.max_batch
+        if self.paged:
+            self.peak_live_slots = max(self.peak_live_slots, len(live))
         prefilling = any(
             self.slot_fed[s] < len(self.slot_req[s].prompt) for s in live)
         t0 = time.perf_counter()
@@ -346,10 +490,16 @@ class ServingEngine:
         batch = {"tokens": jnp.asarray(tokens)}
         if self.cfg.mrope:
             batch["positions3"] = self._positions3(index, c)
+        step_args = ()
+        if self.paged:
+            for s in live:
+                lo = int(index[s])
+                self._ensure_writable(s, lo, lo + int(valid[s]))
+            step_args = (jnp.asarray(self.block_tables),)
         with self._mesh_ctx():
             logits, self.caches = self._prefill(
                 self.params, self.caches, batch, jnp.asarray(index),
-                jnp.asarray(valid))
+                jnp.asarray(valid), *step_args)
         logits = np.asarray(logits)
         for s in live:
             req = self.slot_req[s]
@@ -357,12 +507,23 @@ class ServingEngine:
                 self.slot_fed[s] += take[s]
                 self.slot_pos[s] += take[s]
                 if self.slot_fed[s] == len(req.prompt):
+                    if self.paged and self._share:
+                        self._register_prompt(s, req)
                     self._emit_token(s, logits[s],
                                      decode_pass=False)  # first gen token
             else:
                 self.slot_pos[s] += 1
                 self._emit_token(s, logits[s], decode_pass=False)
         return n_prompt
+
+    def _register_prompt(self, s: int, req: Request):
+        """Hash-cons the just-completed prompt's pages into the prefix
+        index (before the first generated token, which may retire the
+        slot immediately at max_new_tokens=1): later requests with the
+        same prefix share these physical pages instead of re-prefilling."""
+        n_pages = -(-len(req.prompt) // self.page_size)
+        self.pool.register_prefix(
+            req.prompt, [int(p) for p in self.block_tables[s][:n_pages]])
 
     def _decode_pass(self, live):
         tokens = np.zeros((self.max_batch, 1), np.int32)
@@ -377,10 +538,15 @@ class ServingEngine:
         batch = {"tokens": jnp.asarray(tokens)}
         if self.cfg.mrope:
             batch["positions3"] = self._positions3(index, 1)
+        step_args = ()
+        if self.paged:
+            for s in live:
+                self._ensure_writable(s, int(index[s]), int(index[s]) + 1)
+            step_args = (jnp.asarray(self.block_tables),)
         with self._mesh_ctx():
             logits, self.caches = self._decode(
                 self.params, self.caches, batch, jnp.asarray(index),
-                jnp.asarray(valid))
+                jnp.asarray(valid), *step_args)
         logits = np.asarray(logits)
         for s in live:
             self.slot_pos[s] += 1
@@ -409,6 +575,10 @@ class ServingEngine:
             self._finished.append(req)
             self.metrics.retired += 1
             self.slot_req[s] = None
+            if self.paged:
+                # page-level retirement: drop this slot's references only;
+                # prefix-index pages keep their index ref and stay cached
+                self._release_slot_pages(s)
 
     @staticmethod
     def _sample(logits_row, sp: SamplingParams, rng) -> int:
@@ -457,16 +627,66 @@ class ServingEngine:
                 for path, plan in sorted(self.plans.items())]
 
     def capacity_report(self) -> dict:
-        """Cache-capacity accounting: bytes per slot and admitted slots."""
+        """Cache-capacity accounting: bytes per slot and admitted slots;
+        paged engines add physical-vs-logical page counters (pool free /
+        live / shared pages, prefix-hit and COW counts, DESIGN.md §18)."""
         rep = {
             "kv_bits": getattr(self.cfg.quant, "kv_bits", 0) or 16,
             "cache_bytes_per_slot": self.cache_bytes_per_slot,
             "hbm_cache_budget": self.hbm_cache_budget,
             "slots": self.max_batch,
+            "paged": self.paged,
         }
+        if self.paged:
+            rep.update(
+                page_size=self.page_size,
+                page_bytes=self.page_bytes,
+                num_pages=self.num_pages,
+                pages_per_slot=self.pages_per_slot,
+                # logical slots max_batch vs what worst-case reservations
+                # alone would fit — sharing lifts live slots above this
+                guaranteed_slots=self.num_pages // self.pages_per_slot,
+                peak_live_slot_count=self.peak_live_slots,
+                prefix_sharing=self._share,
+                **self.pool.report())
         if self.shard_plan is not None:
             rep["shard_plan"] = self.shard_plan.describe()
         return rep
+
+    # ------------------------------------------------------------------
+    # Paged-state serialization (Router drain/restore, DESIGN.md §18)
+    # ------------------------------------------------------------------
+
+    def export_paged_state(self):
+        """(caches, pool_meta): the device-side page pools (every layer's
+        paged KV leaves — the bytes behind the warm prefix cache) plus the
+        pool's JSON-able bookkeeping.  Drain retires live slots first, so
+        what survives is exactly the prefix index and its pages."""
+        if not self.paged:
+            raise ValueError("export_paged_state on an unpaged engine")
+        return self.caches, self.pool.export_meta()
+
+    def import_paged_state(self, caches, pool_meta: dict):
+        """Adopt a drained engine's page pools + prefix index (restore
+        path, inverse of :meth:`export_paged_state`).  Geometry must match
+        this engine's construction — the Router rebuilds the engine from
+        the same EngineConfig first."""
+        if not self.paged:
+            raise ValueError("import_paged_state on an unpaged engine")
+        if (pool_meta["num_pages"] != self.num_pages
+                or pool_meta["page_size"] != self.page_size):
+            raise ValueError(
+                f"paged-state geometry mismatch: checkpoint has "
+                f"{pool_meta['num_pages']} pages x {pool_meta['page_size']} "
+                f"rows, engine was built with {self.num_pages} x "
+                f"{self.page_size}")
+        self.caches = jax.tree.map(
+            lambda tpl, leaf: jnp.asarray(leaf, tpl.dtype),
+            self.caches, caches)
+        if self.shard_plan is not None:
+            self.caches = self.shard_plan.place_caches(
+                self.caches, self.cfg, self.max_batch, paged=True)
+        self.pool = pages_lib.PagePool.from_meta(pool_meta)
 
     def run_to_completion(self):
         """Drain queue + slots; returns every request retired since the

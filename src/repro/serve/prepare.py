@@ -185,6 +185,20 @@ def cache_bytes_per_slot(cfg, max_len: int) -> int:
     return lm.cache_bytes(cfg, 1, max_len)
 
 
+def cache_page_bytes(cfg, page_size: int) -> int:
+    """HBM bytes one KV page (``page_size`` token rows, all attn layers)
+    occupies, including its per-(pos, kv-head) scale planes.
+
+    The paged engine's capacity term (DESIGN.md §18): under a fixed HBM
+    cache budget, num_pages = budget // cache_page_bytes, and admission
+    reserves pages per request rather than whole max_len slots.  Returns 0
+    for attention-free stacks (nothing pageable — the engine rejects
+    ``paged=True`` there).
+    """
+    from repro.models import lm
+    return lm.cache_page_bytes(cfg, page_size)
+
+
 def serving_param_bytes(params) -> int:
     """HBM bytes of a serving param tree (for the memory roofline term)."""
     import jax

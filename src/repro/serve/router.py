@@ -306,9 +306,17 @@ class Router:
                 "checkpoint": None}
         if directory is not None:
             step = next(self._ckpt_step)
-            checkpoint.save(directory, self._params, step=step,
-                            extra={"kind": "serving-params",
-                                   "replica": replica})
+            state = {"params": self._params}
+            extra = {"kind": "serving-params", "replica": replica}
+            if getattr(eng, "paged", False):
+                # the warm prefix cache survives the drain: live slots
+                # just retired, so the page pools hold exactly the prefix
+                # index's pages — serialize them (device arrays through
+                # the checkpoint tree, bookkeeping through the manifest)
+                caches, pool_meta = eng.export_paged_state()
+                state["paged_kv"] = caches
+                extra["paged_meta"] = pool_meta
+            checkpoint.save(directory, state, step=step, extra=extra)
             self._ckpt[replica] = (directory, step)
             info["checkpoint"] = {"directory": str(directory),
                                   "step": step}
@@ -321,18 +329,25 @@ class Router:
     def restore(self, replica: int, directory=None):
         """Reattach a drained replica: load the handoff checkpoint (or
         fall back to the in-memory params when none was written) and
-        rebuild the engine on its original mesh group."""
+        rebuild the engine on its original mesh group.  A paged replica
+        additionally re-adopts its drained page pools and prefix index
+        (manifest ``paged_meta``), so the restored engine's prefix cache
+        is as warm as the moment it drained."""
         if self.engines[replica] is not None:
             raise ValueError(f"replica {replica} is attached; drain first")
         if directory is None:
             directory = self._ckpt.get(replica, (self.checkpoint_dir,))[0]
+        eng = ServingEngine(self.cfg, self._params, config=self.config,
+                            mesh=self.replica_meshes[replica])
         if directory is not None:
-            params, _ = checkpoint.restore(directory, self._params)
-        else:
-            params = self._params
-        self.engines[replica] = ServingEngine(
-            self.cfg, params, config=self.config,
-            mesh=self.replica_meshes[replica])
+            template = {"params": self._params}
+            if getattr(eng, "paged", False):
+                template["paged_kv"] = eng.caches
+            state, manifest = checkpoint.restore(directory, template)
+            if getattr(eng, "paged", False) and "paged_meta" in manifest:
+                eng.import_paged_state(state["paged_kv"],
+                                       manifest["paged_meta"])
+        self.engines[replica] = eng
         self.restores += 1
         return self.engines[replica]
 

@@ -120,12 +120,17 @@ class ShardPlan:
     # Cache shardings (kv-head axis; quantized layouts included)
     # ------------------------------------------------------------------
 
-    def cache_shardings(self, caches, cfg, batch: int):
+    def cache_shardings(self, caches, cfg, batch: int, *,
+                        paged: bool = False):
+        """``paged=True``: the attention leaves are page pools
+        [P, page_size, KVH, ...] — kv-head rule unchanged (KVH is still
+        axis 2), but the page axis replicates: pages are shared physical
+        capacity any slot's block table may point into (DESIGN.md §18)."""
         return sharding_lib.cache_shardings(
-            caches, cfg, self.mesh, batch, kv_head_shard=True)
+            caches, cfg, self.mesh, batch, kv_head_shard=True, paged=paged)
 
-    def place_caches(self, caches, cfg, batch: int):
-        shardings = self.cache_shardings(caches, cfg, batch)
+    def place_caches(self, caches, cfg, batch: int, *, paged: bool = False):
+        shardings = self.cache_shardings(caches, cfg, batch, paged=paged)
         return jax.tree.map(
             lambda c, s: None if c is None else jax.device_put(c, s),
             caches, shardings, is_leaf=lambda x: x is None)

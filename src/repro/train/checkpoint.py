@@ -105,8 +105,16 @@ def restore(directory, state_template, *, step: int | None = None,
             raise FileNotFoundError(f"no committed checkpoint in {directory}")
     d = directory / f"step_{step}"
     manifest = json.loads((d / "manifest.json").read_text())
-    arrays = [np.load(d / "arrays" / leaf["file"])
-              for leaf in manifest["leaves"]]
+
+    def load(leaf):
+        arr = np.load(d / "arrays" / leaf["file"])
+        if arr.dtype.kind == "V":
+            # extension dtypes (bfloat16 via ml_dtypes) round-trip through
+            # npy as raw void bytes; the manifest records the real dtype
+            arr = arr.view(np.dtype(leaf["dtype"]))
+        return arr
+
+    arrays = [load(leaf) for leaf in manifest["leaves"]]
     treedef = jax.tree_util.tree_structure(state_template)
     if treedef.num_leaves != len(arrays):
         raise ValueError(

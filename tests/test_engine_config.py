@@ -1,7 +1,7 @@
 """EngineConfig: the redesigned serving construction surface (DESIGN.md
 §17) — validation at construction, the HBM-budget capacity rule as a
-method, CLI/programmatic construction through one path, and the legacy
-keyword deprecation shim on ServingEngine.
+method, CLI/programmatic construction through one path, and the hard
+removal of the legacy keyword surface on ServingEngine.
 """
 
 import dataclasses
@@ -106,6 +106,50 @@ def test_from_args_matches_programmatic():
         sampling=SamplingParams(temperature=0.7, top_k=4))
 
 
+def test_pages_for_budget_math():
+    """Paged twin of slots_for: the budget buys pages, floored at one
+    worst-case slot's worth."""
+    assert EngineConfig(max_batch=3).pages_for(100, 2) == 6   # no budget
+    c = EngineConfig(max_batch=1, hbm_cache_budget=1000)
+    assert c.pages_for(100, 2) == 10
+    with pytest.raises(ValueError, match="hbm_cache_budget"):
+        c.pages_for(600, 2)                # < one worst-case slot
+
+
+def test_page_size_validated_at_construction():
+    with pytest.raises(ValueError, match="page_size"):
+        EngineConfig(page_size=0)
+
+
+def test_from_args_paged_flags():
+    from repro.launch.serve import build_parser
+    args = build_parser().parse_args([
+        "--arch", "stablelm-1.6b", "--paged-kv", "--page-size", "32",
+        "--no-prefix-sharing"])
+    c = EngineConfig.from_args(args)
+    assert c.paged and c.page_size == 32 and not c.prefix_sharing
+    default = EngineConfig.from_args(
+        build_parser().parse_args(["--arch", "stablelm-1.6b"]))
+    assert not default.paged and default.prefix_sharing
+
+
+def test_from_args_sub_megabyte_budget_is_not_unlimited():
+    """A positive --hbm-cache-budget-mb must never silently become 'no
+    budget' (the old `int(mb * 2**20) or None` truncation bug); only an
+    explicit 0 / negative disables the budget."""
+    from repro.launch.serve import build_parser
+
+    def parse(mb):
+        return EngineConfig.from_args(build_parser().parse_args(
+            ["--arch", "stablelm-1.6b", "--hbm-cache-budget-mb", mb]))
+
+    assert parse("0").hbm_cache_budget is None
+    assert parse("-1").hbm_cache_budget is None
+    assert parse("0.5").hbm_cache_budget == 512 * 1024
+    with pytest.raises(ValueError, match="under one byte"):
+        parse("0.0000001")
+
+
 def test_from_args_zero_sentinels_map_to_none():
     from repro.launch.serve import build_parser
     args = build_parser().parse_args(
@@ -128,50 +172,31 @@ def test_cli_flags_are_grouped():
 
 
 # ---------------------------------------------------------------------------
-# Legacy keyword shim (one release, DeprecationWarning)
+# Legacy keyword surface: shim removed after its one-release grace period
 # ---------------------------------------------------------------------------
 
-def test_legacy_kwargs_warn_and_forward(tiny):
+@pytest.mark.parametrize("legacy_kw", [
+    dict(max_batch=3, max_len=48),
+    dict(greedy=False),
+    dict(prefill_chunk=0),
+    dict(batch_size=2),                 # unknown kwargs too — same error
+])
+def test_legacy_kwargs_raise_naming_engine_config(tiny, legacy_kw):
+    """The PR 7 DeprecationWarning shim is gone: every engine keyword —
+    known-legacy or unknown — is a TypeError pointing at EngineConfig."""
     cfg, params = tiny
-    with pytest.warns(DeprecationWarning, match="EngineConfig"):
-        eng = ServingEngine(cfg, params, max_batch=3, max_len=48,
-                            packed=False, prefill_chunk=8, max_queue=2)
-    assert eng.config == EngineConfig(
-        max_batch=3, max_len=48, packed=False, prefill_chunk=8,
-        max_queue=2)
-    assert (eng.max_batch, eng.max_len, eng.prefill_chunk) == (3, 48, 8)
-
-
-def test_legacy_greedy_flag_folds_into_sampling(tiny):
-    cfg, params = tiny
-    with pytest.warns(DeprecationWarning):
-        eng = ServingEngine(cfg, params, max_len=32, packed=False,
-                            greedy=False)
-    assert eng.sampling == SamplingParams(temperature=1.0)
-
-
-def test_legacy_prefill_chunk_clamps_like_before(tiny):
-    """Old constructor clamped prefill_chunk to >= 1; the shim preserves
-    that, while direct EngineConfig construction now raises."""
-    cfg, params = tiny
-    with pytest.warns(DeprecationWarning):
-        eng = ServingEngine(cfg, params, max_len=32, packed=False,
-                            prefill_chunk=0)
-    assert eng.prefill_chunk == 1
+    with pytest.raises(TypeError, match="EngineConfig"):
+        ServingEngine(cfg, params, **legacy_kw)
 
 
 def test_config_plus_legacy_kwargs_rejected(tiny):
     cfg, params = tiny
-    with pytest.raises(TypeError, match="not both"):
+    with pytest.raises(TypeError, match="EngineConfig"):
         ServingEngine(cfg, params, config=EngineConfig(), max_batch=2)
 
 
-def test_unknown_legacy_kwarg_rejected(tiny):
-    cfg, params = tiny
-    with pytest.raises(TypeError):
-        with warnings.catch_warnings():
-            warnings.simplefilter("ignore", DeprecationWarning)
-            ServingEngine(cfg, params, batch_size=2)
+def test_from_legacy_kwargs_is_gone():
+    assert not hasattr(EngineConfig, "from_legacy_kwargs")
 
 
 def test_config_path_emits_no_deprecation(tiny):

@@ -174,6 +174,64 @@ def test_packed_kv_sliding_window_decode_consistent(name):
 
 
 # ---------------------------------------------------------------------------
+# Ring position bookkeeping (wraparound edge cases)
+# ---------------------------------------------------------------------------
+
+def _ring_ref(last, size):
+    """Brute force: slot s holds the latest position p <= last with
+    p % size == s (-1 if never written)."""
+    out = np.full(size, -1, np.int64)
+    for p in range(last + 1):
+        out[p % size] = p
+    return out
+
+
+@pytest.mark.parametrize("size", [4, 6])
+def test_ring_positions_window_equals_size(size):
+    """size == window — the ring is exactly the attention window, so every
+    slot flips meaning on the wrap step; positions must match the brute
+    force 'latest p with p % size == s' definition through two laps."""
+    for last in (size - 1, size, 2 * size - 1, 2 * size):
+        got = np.asarray(attention._ring_positions(last, size, size))
+        np.testing.assert_array_equal(got, _ring_ref(last, size))
+
+
+def test_ring_positions_last_at_final_slot():
+    """last == size - 1: ring exactly full, one step before the first wrap
+    — positions equal slot indices — and the very next write (last ==
+    size) rewrites only slot 0."""
+    size = 8
+    got = np.asarray(attention._ring_positions(size - 1, size, size))
+    np.testing.assert_array_equal(got, np.arange(size))
+    nxt = np.asarray(attention._ring_positions(size, size, size))
+    np.testing.assert_array_equal(nxt, [size] + list(range(1, size)))
+
+
+def test_ring_positions_batch_matches_scalar():
+    """The batched variant is row-for-row the scalar one, including rows
+    mid-wrap and rows exactly at last == size - 1."""
+    size = 6
+    lasts = np.array([0, size - 1, size, 2 * size - 1, 3], np.int32)
+    batch = np.asarray(attention._ring_positions_batch(
+        jnp.asarray(lasts), size, size))
+    for i, last in enumerate(lasts):
+        np.testing.assert_array_equal(
+            batch[i],
+            np.asarray(attention._ring_positions(int(last), size, size)))
+
+
+def test_ring_positions_batch_no_window_empty_rows():
+    """window == 0 (full-length cache, no wrap): slots past last read -1,
+    and a never-written row (last == -1) is entirely empty."""
+    size = 5
+    lasts = jnp.asarray([-1, 0, size - 1], jnp.int32)
+    got = np.asarray(attention._ring_positions_batch(lasts, size, 0))
+    np.testing.assert_array_equal(got[0], -np.ones(size))
+    np.testing.assert_array_equal(got[1], [0, -1, -1, -1, -1])
+    np.testing.assert_array_equal(got[2], np.arange(size))
+
+
+# ---------------------------------------------------------------------------
 # Fused-dequant read path parity
 # ---------------------------------------------------------------------------
 
