@@ -13,6 +13,14 @@ same-runner-class trend job).  Exit status: 0 = pass, 1 = regression,
 2 = usage/IO error.  A markdown summary goes to stdout and, when the
 environment provides it, ``$GITHUB_STEP_SUMMARY`` (DESIGN.md §14).
 
+**Floors**: a bench row may carry ``"floor": {metric: minimum}`` to assert
+a hard lower bound on its own same-run ratio, independent of any baseline
+(e.g. serve.speculative requires ``speculative_speedup`` > 1.5x, the
+DESIGN.md §19 acceptance bar).  Floors are checked against the CURRENT
+run's rows — a fresh baseline cannot launder a broken floor away — and a
+violation is a gated ``below-floor`` failure even when the delta-vs-
+baseline is within tolerance.
+
 Baseline refresh is one command:
 
     PYTHONPATH=src python -m benchmarks.run --quick --update-baseline
@@ -175,12 +183,40 @@ def compare(baseline: dict, current: dict, *, tolerance: float = 0.25,
                         NEAR_UNITY_BAND[0] <= b <= NEAR_UNITY_BAND[1]:
                     gated = False
                 add(bench, case, metric, base_v, cur_row.get(metric), gated)
+    findings.extend(_floor_findings(cur_f))
+    return findings
+
+
+def _floor_findings(cur_flat: dict) -> list[dict]:
+    """Hard same-run minimums (module docstring): every current row with a
+    ``floor`` mapping yields one gated finding per floored metric —
+    ``below-floor`` when the measured value undercuts the bound (or is
+    absent/non-numeric), ``ok`` otherwise.  ``base`` carries the floor so
+    the summary table reads 'required vs measured'."""
+    findings = []
+    for bench, rows in sorted(cur_flat.items()):
+        for case, row in rows.items():
+            floor = row.get("floor")
+            if not isinstance(floor, dict):
+                continue
+            for metric, bound in sorted(floor.items()):
+                bound_v, cur_v = _num(bound), _num(row.get(metric))
+                if bound_v is None:
+                    continue
+                ok = cur_v is not None and cur_v >= bound_v
+                findings.append({
+                    "bench": bench, "case": case,
+                    "metric": f"{metric} (floor)",
+                    "base": bound_v, "cur": cur_v, "delta_pct": None,
+                    "gated": True,
+                    "status": "ok" if ok else "below-floor"})
     return findings
 
 
 def gate_failures(findings: list[dict]) -> list[dict]:
     return [f for f in findings
-            if f["gated"] and f["status"] in ("regressed", "missing")]
+            if f["gated"] and f["status"] in ("regressed", "missing",
+                                              "below-floor")]
 
 
 # ---------------------------------------------------------------------------
@@ -188,7 +224,7 @@ def gate_failures(findings: list[dict]) -> list[dict]:
 # ---------------------------------------------------------------------------
 
 _MARK = {"ok": "✓", "improved": "▲", "regressed": "✗", "missing": "∅",
-         "layout-changed": "↻"}
+         "layout-changed": "↻", "below-floor": "✗"}
 
 
 def _fmt(v) -> str:

@@ -524,13 +524,103 @@ def run_router(quick: bool = False):
     return rows
 
 
+def run_speculative(quick: bool = False):
+    """Speculative decoding vs plain decode, same run (DESIGN.md §19).
+
+    Two rows on the float engine at a decode-heavy workload (short
+    prompts, long generations): plain token-at-a-time decode, and the
+    draft-k + verify-in-one-call loop.  The draft here IS the target
+    (float params), so greedy acceptance is 1.0 and the measured
+    ``speculative_speedup`` isolates the loop's structural win — 2
+    launches per committed-window cycle instead of one launch per token
+    — at a verified-identical output (``tokens_match``).  The row
+    carries ``floor: {speculative_speedup: 1.5}``, the hard same-run
+    acceptance bar compare.py enforces on every current run.
+
+    A third, report-only row packs the target at W2A2 and drafts through
+    the re-packed sub-byte draft tree (serve/speculative.DraftModel) —
+    the full draft-repack path under the real packed kernels, with
+    ``acceptance_rate`` showing the draft's fidelity.
+    """
+    from repro import configs
+    from repro.core.quant import QuantConfig
+    from repro.models import lm
+    from repro.serve.config import EngineConfig
+    from repro.serve.engine import Metrics, Request, ServingEngine
+
+    k = 8
+    prompt_len = 8
+    # 1 prefill-pass token + a whole number of full (k+1)-token cycles,
+    # so every measured cycle runs at full draft depth
+    new_tokens = 1 + (3 if quick else 6) * (k + 1)
+    n_req = 2
+    base = configs.get_config("stablelm-1.6b", reduced=True).replace(
+        param_dtype="float32", compute_dtype="float32")
+    float_cfg = base.replace(quant=QuantConfig(enabled=False))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, base.vocab_size, prompt_len).astype(np.int32)
+               for _ in range(n_req)]
+
+    def bench(cfg, spec_k, packed):
+        eng = ServingEngine(cfg, lm.init_params(jax.random.PRNGKey(0), cfg),
+                            config=EngineConfig(
+            max_batch=n_req, max_len=prompt_len + new_tokens + 2,
+            packed=packed, prefill_chunk=8, speculative_k=spec_k))
+        # warmup: compile prefill + decode (or draft + verify) steps
+        eng.submit(Request(uid=10_000, prompt=prompts[0],
+                           max_new_tokens=spec_k + 2))
+        eng.run_to_completion()
+        eng.metrics = Metrics()
+        for i, p in enumerate(prompts):
+            eng.submit(Request(uid=i, prompt=p, max_new_tokens=new_tokens))
+        outs = {r.uid: tuple(r.output) for r in eng.run_to_completion()}
+        return eng.metrics.report(), outs
+
+    plain_rep, plain_out = bench(float_cfg, 0, packed=False)
+    spec_rep, spec_out = bench(float_cfg, k, packed=False)
+    rows = [{
+        "case": "speculative/plain-decode",
+        "speculative_k": 0, "new_tokens": new_tokens,
+        "decode_tok_s": plain_rep["decode_tok_s"],
+    }, {
+        "case": "speculative/draft-verify",
+        "speculative_k": k, "new_tokens": new_tokens,
+        "decode_tok_s": spec_rep["decode_tok_s"],
+        "acceptance_rate": spec_rep["acceptance_rate"],
+        "spec_cycles": spec_rep["spec_cycles"],
+        "speculative_speedup": round(
+            spec_rep["decode_tok_s"]
+            / max(plain_rep["decode_tok_s"], 1e-9), 2),
+        "tokens_match": spec_out == plain_out,
+        "floor": {"speculative_speedup": 1.5},
+    }]
+    packed_plain_rep, _ = bench(base, 0, packed=True)
+    packed_rep, _ = bench(base, k, packed=True)
+    rows.append({
+        "case": "speculative/packed-w2-draft",
+        "speculative_k": k, "new_tokens": new_tokens,
+        "draft_w_bits": base.quant.w_bits,
+        "decode_tok_s": packed_rep["decode_tok_s"],
+        "acceptance_rate": packed_rep["acceptance_rate"],
+        "spec_cycles": packed_rep["spec_cycles"],
+        "decode_tok_s_ratio_vs_plain": round(
+            packed_rep["decode_tok_s"]
+            / max(packed_plain_rep["decode_tok_s"], 1e-9), 3),
+    })
+    emit(rows, ["case", "speculative_k", "new_tokens", "decode_tok_s",
+                "acceptance_rate", "spec_cycles", "speculative_speedup",
+                "tokens_match"])
+    return rows
+
+
 def run(quick: bool = False):
     return {"linear": run_linear(quick),
             "engine": run_engine(quick),
             "kv_cache": run_kv_cache(quick),
             "paged": run_paged(quick),
             "sharded": run_sharded(quick),
-            "router": run_router(quick)}
+            "router": run_router(quick),
+            "speculative": run_speculative(quick)}
 
 
 if __name__ == "__main__":

@@ -91,6 +91,20 @@ def build_parser() -> argparse.ArgumentParser:
     eng.add_argument("--no-prefix-sharing", action="store_true",
                      help="disable radix prefix sharing across paged "
                           "requests (pages still allocated on demand)")
+    eng.add_argument("--speculative-k", type=int, default=0,
+                     help="speculative decoding (DESIGN.md §19): draft up "
+                          "to K tokens per decode pass with a sub-byte "
+                          "copy of the model, verify them in one target "
+                          "call (0 = off)")
+    eng.add_argument("--draft-w-bits", type=int, default=2,
+                     choices=(1, 2, 3, 4),
+                     help="draft model weight/activation precision (the "
+                          "same checkpoint re-packed; only takes effect "
+                          "on a packed engine)")
+    eng.add_argument("--draft-kv-bits", type=int, default=-1,
+                     choices=(-1, 0, 16, 8, 4, 2),
+                     help="draft KV-cache precision override (-1 = "
+                          "inherit the target's kv_bits)")
 
     samp = ap.add_argument_group("sampling")
     samp.add_argument("--temperature", type=float, default=0.0,

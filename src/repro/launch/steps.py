@@ -219,6 +219,90 @@ def make_prefill_chunk_step(cfg, *, kv_shard_axis: str | None = None):
     return prefill_chunk_step
 
 
+def make_verify_chunk_step(cfg, *, kv_shard_axis: str | None = None):
+    """Speculative-verify step: a prefill-chunk pass returning the FULL
+    per-position logits window (DESIGN.md §19).
+
+    Identical cache semantics to :func:`make_prefill_chunk_step` — the
+    [B, w] window writes K/V at per-slot offsets ``index`` with
+    valid-prefix gating ``valid`` — but returns ``logits [B, w, vocab]``
+    instead of only the last valid row: window row ``j`` is the target
+    distribution for the token at position ``index + j + 1``, exactly
+    what accept/reject needs for every drafted token at once.  Chunked
+    writes equal sequential writes (the PR 2 invariant), so positions
+    past the accepted prefix hold stale K/V that attention masks (via
+    ``cache_valid``-derived visibility) until a later pass overwrites
+    them — speculative rollback is simply not advancing the slot
+    position.
+    """
+    qmode = quant_mode_for(cfg, "prefill_chunk")
+
+    def verify_chunk_step(params, caches, batch, index, valid,
+                          block_tables=None):
+        b, c = batch["tokens"].shape
+        dec = dict(batch)
+        idx = jnp.asarray(index, jnp.int32)
+        vld = jnp.asarray(valid, jnp.int32)
+        dec["positions"] = idx[:, None] + jnp.arange(c, dtype=jnp.int32)
+        logits, _, caches = lm.forward(params, cfg, dec, quant_mode=qmode,
+                                       caches=caches, cache_index=idx,
+                                       cache_valid=vld,
+                                       kv_shard_axis=kv_shard_axis,
+                                       block_tables=block_tables)
+        return logits, caches
+
+    return verify_chunk_step
+
+
+def make_draft_step(cfg, k: int, *, kv_shard_axis: str | None = None):
+    """Draft ``k`` greedy tokens per slot in ONE device launch.
+
+    ``cfg`` is the DRAFT model config (same checkpoint re-packed at
+    ``draft_w_bits``, serve/speculative.draft_model_config).  The body
+    unrolls ``k + 1`` single-token decode forwards (k is small and
+    static): step ``i`` feeds token ``i`` of the chain (the slot's last
+    committed token at i=0, then each argmax draft) at position
+    ``index + i`` and writes its K/V row; steps ``0..k-1`` also argmax
+    the next draft token.  The extra ``k``-th forward exists purely for
+    its cache write — when every draft is accepted the next cycle needs
+    the K/V of the last drafted token in the draft cache too.
+
+    ``limit`` [B] caps per-slot drafting (``min(k, remaining - 1)``):
+    step ``i`` writes its row iff ``i < limit + 1``, so draft-cache
+    writes never exceed the slot's reserved extent.  Draft sampling is
+    deliberately greedy (a delta proposal): the host-side rejection rule
+    then needs only the TARGET distribution, keeping the draft launch
+    RNG-free while the committed-token distribution still exactly
+    matches target-only sampling (DESIGN.md §19).
+
+    Returns (draft_tokens [B, k] int32, new draft caches); entries past
+    ``limit`` are garbage the host ignores.
+    """
+    qmode = quant_mode_for(cfg, "decode")
+
+    def draft_step(params, caches, batch, index, limit, block_tables=None):
+        idx = jnp.asarray(index, jnp.int32)
+        lim = jnp.asarray(limit, jnp.int32)
+        tok = jnp.asarray(batch["tokens"][:, 0], jnp.int32)
+        drafted = []
+        for i in range(k + 1):
+            dec = {"tokens": tok[:, None],
+                   "positions": (idx + i)[:, None]}
+            step_valid = (lim + 1 > i).astype(jnp.int32)
+            logits, _, caches = lm.forward(
+                params, cfg, dec, quant_mode=qmode, caches=caches,
+                cache_index=idx + i, cache_valid=step_valid,
+                kv_shard_axis=kv_shard_axis, block_tables=block_tables)
+            if i < k:
+                # vocab padding is already masked by forward's pad_bias,
+                # so the argmax stays inside the real vocab
+                tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+                drafted.append(tok)
+        return jnp.stack(drafted, axis=1), caches
+
+    return draft_step
+
+
 def jitted_serving_steps(cfg, *, kv_shard_axis: str | None = None,
                          mesh=None):
     """Jitted ``(decode_step, prefill_chunk_step)`` pair, memoized per
@@ -245,3 +329,33 @@ def _jitted_serving_steps(cfg, kv_shard_axis, _mesh_key):
     return (jax.jit(make_decode_step(cfg, kv_shard_axis=kv_shard_axis)),
             jax.jit(make_prefill_chunk_step(cfg,
                                             kv_shard_axis=kv_shard_axis)))
+
+
+def jitted_speculative_steps(cfg, draft_cfg, k: int, *,
+                             kv_shard_axis: str | None = None, mesh=None):
+    """Jitted ``(draft_step, verify_chunk_step)`` pair for speculative
+    decoding (DESIGN.md §19), memoized like :func:`jitted_serving_steps`.
+
+    The draft step is keyed by the DRAFT config and ``k`` (its unroll
+    depth is baked into the trace); the verify step by the TARGET config
+    — so a fleet of replicas sharing one (target, draft, k) triple
+    compiles each exactly once, and an engine whose target config
+    already has serving steps shares nothing incorrectly (the verify
+    window width is dynamic per trace, like prefill chunks).
+    """
+    key = None if mesh is None else (
+        tuple(d.id for d in mesh.devices.flat),
+        tuple(sorted(mesh.shape.items())))
+    return (_jitted_draft_step(draft_cfg, k, kv_shard_axis, key),
+            _jitted_verify_step(cfg, kv_shard_axis, key))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_draft_step(cfg, k, kv_shard_axis, _mesh_key):
+    return jax.jit(make_draft_step(cfg, k, kv_shard_axis=kv_shard_axis))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_verify_step(cfg, kv_shard_axis, _mesh_key):
+    return jax.jit(make_verify_chunk_step(cfg,
+                                          kv_shard_axis=kv_shard_axis))

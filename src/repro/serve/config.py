@@ -53,11 +53,42 @@ class EngineConfig:
 
     One field per engine knob; programmatic callers, the CLI
     (:meth:`from_args`), and the Router all construct through this class.
-    The paged trio (``paged`` / ``page_size`` / ``prefix_sharing``) selects
-    the block-table KV cache of DESIGN.md §18: the HBM budget then buys
-    *pages* (:meth:`pages_for`) instead of whole max_len slots
-    (:meth:`slots_for`), and ``max_batch`` bounds concurrent logical slots
-    rather than physical cache rows.
+    Validation runs in ``__post_init__`` so a bad combination fails at
+    construction, before params are packed or steps jitted.
+
+    Field semantics (units in brackets):
+
+    * ``max_batch`` — concurrent batch slots [sequences]; with an
+      ``hbm_cache_budget`` the effective slot count is recomputed by
+      :meth:`slots_for` / bounded logically under ``paged`` (DESIGN.md
+      §13, §18).
+    * ``max_len`` [tokens] — per-slot cache extent; every request must
+      satisfy ``len(prompt) + max_new_tokens <= max_len``.
+    * ``packed`` — serve through the paper's packed integer kernels
+      (params converted by serve/prepare.py); ``dense_store`` selects the
+      bit-dense int32-word weight layout and requires ``packed``.
+    * ``prefill_chunk`` [tokens] — chunked-prefill window width
+      (DESIGN.md §12); sliding-window configs force 1 at engine init.
+    * ``max_queue`` — backpressure cap on queued requests (None =
+      unbounded); under a fleet a full replica queue spills to the
+      Router.
+    * ``hbm_cache_budget`` [bytes] — KV-cache budget converted to slots
+      (:meth:`slots_for`) or pages (:meth:`pages_for`).
+    * ``paged`` / ``page_size`` / ``prefix_sharing`` — the block-table KV
+      cache of DESIGN.md §18.  Invariant: ``page_size`` must be a
+      multiple of the kv-bits word-packing tail (``32 // kv_bits`` rows
+      for 4/2-bit caches — serve/pages.validate_page_size), checked at
+      engine init where ``kv_bits`` is known.
+    * ``speculative_k`` [tokens] — >0 enables speculative decoding
+      (DESIGN.md §19): every pure-decode pass drafts up to ``k`` tokens
+      with a 2-bit copy of the model and verifies them in one
+      ``[B, k+1]`` target call.  ``draft_w_bits`` is the draft weight
+      precision; ``draft_kv_bits`` overrides the draft KV-cache
+      precision (None = inherit the target's).  Both only take effect on
+      a packed engine (an unpacked engine drafts with the same float
+      params — still fewer launches per token).  Speculation requires a
+      pure-attention decoder stack (no sliding window, no M-RoPE, not
+      encoder-decoder), validated at engine init.
     """
 
     max_batch: int = 4
@@ -72,6 +103,9 @@ class EngineConfig:
     paged: bool = False
     page_size: int = 16
     prefix_sharing: bool = True
+    speculative_k: int = 0
+    draft_w_bits: int = 2
+    draft_kv_bits: int | None = None
 
     def __post_init__(self):
         if self.max_batch < 1:
@@ -104,6 +138,19 @@ class EngineConfig:
         if self.page_size < 1:
             raise ValueError(
                 f"page_size must be >= 1, got {self.page_size}")
+        if self.speculative_k < 0:
+            raise ValueError(
+                f"speculative_k must be >= 0 (0 = off), got "
+                f"{self.speculative_k}")
+        if self.speculative_k:
+            if self.draft_w_bits not in (1, 2, 3, 4):
+                raise ValueError(
+                    f"draft_w_bits must be a packable sub-byte width in "
+                    f"{{1, 2, 3, 4}}, got {self.draft_w_bits}")
+            if self.draft_kv_bits not in (None, 0, 2, 4, 8, 16):
+                raise ValueError(
+                    f"draft_kv_bits must be None (inherit target) or one "
+                    f"of 0/16/8/4/2, got {self.draft_kv_bits}")
 
     # ------------------------------------------------------------------
     # Capacity math (moved out of ServingEngine.__init__, DESIGN.md §13)
@@ -184,4 +231,8 @@ class EngineConfig:
             autotune=args.autotune,
             paged=getattr(args, "paged_kv", False),
             page_size=getattr(args, "page_size", 16),
-            prefix_sharing=not getattr(args, "no_prefix_sharing", False))
+            prefix_sharing=not getattr(args, "no_prefix_sharing", False),
+            speculative_k=getattr(args, "speculative_k", 0),
+            draft_w_bits=getattr(args, "draft_w_bits", 2),
+            draft_kv_bits=(None if getattr(args, "draft_kv_bits", -1) < 0
+                           else args.draft_kv_bits))

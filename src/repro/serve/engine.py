@@ -39,6 +39,7 @@ import numpy as np
 from repro.launch import steps as steps_lib
 from repro.models import lm
 from repro.serve import pages as pages_lib
+from repro.serve import speculative as speculative_lib
 from repro.serve.config import EngineConfig, SamplingParams
 from repro.serve.prepare import (build_layer_plans, cache_bytes_per_slot,
                                  cache_page_bytes, prepare_serving_params)
@@ -79,6 +80,16 @@ class Metrics:
     per *retired* request with >= 2 output tokens (first token -> finish,
     per subsequent token).  ``report()`` surfaces mean / p50 / p95 of
     both (DESIGN.md §12).
+
+    Speculative decoding (DESIGN.md §19) adds the draft/verify ledger:
+    ``drafted_tokens`` counts draft proposals actually considered
+    (per-slot ``limit``, not k x cycles), ``accepted_tokens`` those the
+    rejection rule kept, ``verify_tokens`` target window rows scored,
+    and ``spec_cycles`` draft+verify launch pairs.  ``report()`` derives
+    ``acceptance_rate`` = accepted / drafted — the knob that decides
+    whether k was too ambitious for the draft's fidelity.  Committed
+    tokens still land in ``decode_tokens``, so ``decode_tok_s`` stays
+    directly comparable with a non-speculative engine.
     """
     prefill_tokens: int = 0
     generated_tokens: int = 0
@@ -92,6 +103,10 @@ class Metrics:
     slot_steps_live: int = 0
     slot_steps_total: int = 0
     admission_wait_s: float = 0.0
+    drafted_tokens: int = 0
+    accepted_tokens: int = 0
+    verify_tokens: int = 0
+    spec_cycles: int = 0
     ttft_s: list = dataclasses.field(default_factory=list)
     tpot_s: list = dataclasses.field(default_factory=list)
 
@@ -123,6 +138,12 @@ class Metrics:
                                    self.slot_steps_total), 3),
             "mean_admission_wait_s": round(div(self.admission_wait_s,
                                                self.admitted), 5),
+            "drafted_tokens": self.drafted_tokens,
+            "accepted_tokens": self.accepted_tokens,
+            "verify_tokens": self.verify_tokens,
+            "spec_cycles": self.spec_cycles,
+            "acceptance_rate": round(div(self.accepted_tokens,
+                                         self.drafted_tokens), 3),
             "ttft_s": self._dist(self.ttft_s),
             "tpot_s": self._dist(self.tpot_s),
         }
@@ -264,6 +285,21 @@ class ServingEngine:
         # it (recurrent states have non-zero init, e.g. mLSTM m = -inf)
         self._fresh = lm.init_caches(cfg, 1, self.max_len,
                                      dtype=jnp.bfloat16)
+        # Speculative decoding (DESIGN.md §19): a DraftModel re-packs the
+        # SAME checkpoint at draft_w_bits with its own caches (and, paged,
+        # its own small page pool), and pure-decode passes become
+        # draft-k + verify-in-one-call cycles (_speculative_pass).
+        self.spec = None
+        self._verify = None
+        if config.speculative_k:
+            self._validate_speculative(cfg)
+            self.spec = speculative_lib.DraftModel(
+                cfg, params, config, max_batch=max_batch,
+                max_len=self.max_len, shard_plan=self.shard_plan,
+                mesh=self.mesh, tp_axis=self._tp_axis)
+            _, self._verify = steps_lib.jitted_speculative_steps(
+                cfg, self.spec.cfg, config.speculative_k,
+                kv_shard_axis=self._tp_axis, mesh=self.mesh)
         # per-slot bookkeeping
         self.slot_req: list = [None] * max_batch
         self.slot_pos = np.zeros(max_batch, np.int32)   # tokens in cache
@@ -271,6 +307,27 @@ class ServingEngine:
         self._slot_rng: list = [None] * max_batch
         self._finished: list = []
         self.metrics = Metrics()
+
+    @staticmethod
+    def _validate_speculative(cfg):
+        """Speculation needs a pure-attention decoder whose chunked
+        writes equal sequential writes — the verify-window rollback
+        argument (DESIGN.md §19) does not hold for ring caches,
+        recurrent state, or position schemes the draft step does not
+        model."""
+        problems = []
+        if cfg.is_encoder_decoder:
+            problems.append("encoder-decoder stacks")
+        if cfg.sliding_window:
+            problems.append("sliding-window (ring) KV caches")
+        if cfg.mrope:
+            problems.append("M-RoPE position ids")
+        if any(cfg.layer_kind(i) != "attn" for i in range(cfg.num_layers)):
+            problems.append("non-attention (recurrent) layers")
+        if problems:
+            raise ValueError(
+                f"speculative_k > 0 requires a pure-attention decoder "
+                f"stack; this config has: {', '.join(problems)}")
 
     def _mesh_ctx(self):
         """Announce the serving mesh to sharding.constrain() for the
@@ -425,6 +482,10 @@ class ServingEngine:
                 self.slot_req[slot] = req
                 self.slot_pos[slot] = n_shared
                 self.slot_fed[slot] = n_shared
+                if self.spec is not None:
+                    # the draft replays the FULL prompt (no prefix skip:
+                    # its cache has no rows for skipped positions)
+                    self.spec.begin_slot(slot, req)
                 sp = req.sampling or self.sampling
                 self._slot_rng[slot] = np.random.default_rng(
                     (sp.seed, req.uid & 0xFFFFFFFF))
@@ -452,11 +513,21 @@ class ServingEngine:
             self.peak_live_slots = max(self.peak_live_slots, len(live))
         prefilling = any(
             self.slot_fed[s] < len(self.slot_req[s].prompt) for s in live)
+        if self.spec is not None:
+            # the draft may still be replaying a prefix-skipped prompt
+            # after the target finished; keep the pass a prefill pass
+            # (speculation only runs on pure-decode passes)
+            prefilling = prefilling or any(
+                not self.spec.prompt_done(s, self.slot_req[s])
+                for s in live)
         t0 = time.perf_counter()
         if prefilling:
             n_prompt = self._prefill_pass(live)
             self.metrics.prefill_time_s += time.perf_counter() - t0
             self.metrics.prefill_tokens += n_prompt
+        elif self.spec is not None:
+            self._speculative_pass(live)
+            self.metrics.decode_time_s += time.perf_counter() - t0
         else:
             self._decode_pass(live)
             self.metrics.decode_time_s += time.perf_counter() - t0
@@ -484,9 +555,12 @@ class ServingEngine:
                 tokens[s, :t] = req.prompt[fed:fed + t]
                 valid[s] = take[s] = t
                 n_prompt += t
-            else:              # decode-phase rider: one pending token
+            elif req.output:   # decode-phase rider: one pending token
                 tokens[s, 0] = req.output[-1]
                 valid[s] = 1
+            # else: target prompt done but the first token is stashed
+            # until the speculative draft finishes its full-prompt
+            # replay — a dead slot (valid 0) in this target pass
         batch = {"tokens": jnp.asarray(tokens)}
         if self.cfg.mrope:
             batch["positions3"] = self._positions3(index, c)
@@ -496,11 +570,15 @@ class ServingEngine:
                 lo = int(index[s])
                 self._ensure_writable(s, lo, lo + int(valid[s]))
             step_args = (jnp.asarray(self.block_tables),)
-        with self._mesh_ctx():
-            logits, self.caches = self._prefill(
-                self.params, self.caches, batch, jnp.asarray(index),
-                jnp.asarray(valid), *step_args)
-        logits = np.asarray(logits)
+        logits = None
+        if int(valid.sum()):   # all-stash-waiting passes skip the launch
+            with self._mesh_ctx():
+                logits, self.caches = self._prefill(
+                    self.params, self.caches, batch, jnp.asarray(index),
+                    jnp.asarray(valid), *step_args)
+            logits = np.asarray(logits)
+        if self.spec is not None:
+            self._draft_prefill(live)
         for s in live:
             req = self.slot_req[s]
             if s in take:
@@ -509,12 +587,57 @@ class ServingEngine:
                 if self.slot_fed[s] == len(req.prompt):
                     if self.paged and self._share:
                         self._register_prompt(s, req)
-                    self._emit_token(s, logits[s],
-                                     decode_pass=False)  # first gen token
-            else:
+                    if self.spec is None or self.spec.prompt_done(s, req):
+                        self._emit_token(s, logits[s],
+                                         decode_pass=False)  # first token
+                    else:
+                        # prefix sharing let the target finish before the
+                        # draft's full replay: park the first-token logits
+                        self.spec.stash(s, logits[s])
+            elif req.output:
                 self.slot_pos[s] += 1
                 self._emit_token(s, logits[s], decode_pass=False)
+            elif self.spec is not None and self.spec.has_stash(s) \
+                    and self.spec.prompt_done(s, req):
+                # the draft just caught up: emit the parked first token
+                self._emit_token(s, self.spec.pop_stash(s),
+                                 decode_pass=False)
         return n_prompt
+
+    def _draft_prefill(self, live):
+        """Feed the speculative draft cache its own prefill window:
+        prompt chunks for slots still replaying (from draft position
+        ``fed`` — the draft never prefix-skips, DESIGN.md §19), the
+        single pending token for decode riders so draft and target
+        caches stay position-aligned through mixed passes."""
+        spec = self.spec
+        c = self.prefill_chunk
+        tokens = np.zeros((self.max_batch, c), np.int32)
+        index = np.zeros(self.max_batch, np.int32)
+        valid = np.zeros(self.max_batch, np.int32)
+        fed_take = {}
+        for s in live:
+            req = self.slot_req[s]
+            fed = int(spec.fed[s])
+            rem = len(req.prompt) - fed
+            if rem > 0:
+                t = min(c, rem)
+                tokens[s, :t] = req.prompt[fed:fed + t]
+                index[s] = fed
+                valid[s] = fed_take[s] = t
+            elif req.output:
+                tokens[s, 0] = req.output[-1]
+                index[s] = self.slot_pos[s]
+                valid[s] = 1
+        if not int(valid.sum()):
+            return
+        step_args = (jnp.asarray(spec.block_tables),) if spec.paged else ()
+        with self._mesh_ctx():
+            _, spec.caches = spec._prefill(
+                spec.params, spec.caches, {"tokens": jnp.asarray(tokens)},
+                jnp.asarray(index), jnp.asarray(valid), *step_args)
+        for s, t in fed_take.items():
+            spec.fed[s] += t
 
     def _register_prompt(self, s: int, req: Request):
         """Hash-cons the just-completed prompt's pages into the prefix
@@ -552,11 +675,84 @@ class ServingEngine:
             self.slot_pos[s] += 1
             self._emit_token(s, logits[s], decode_pass=True)
 
+    def _speculative_pass(self, live):
+        """One speculative cycle (DESIGN.md §19): draft up to ``k``
+        greedy tokens per slot in a single launch, score the whole
+        drafted chain in one ``[B, k+1]`` target verify call (the
+        prefill-chunk window shape), then commit the longest
+        target-faithful prefix per slot via rejection sampling
+        (speculative.accept_tokens) — 1..k+1 tokens for two launches."""
+        k = self.config.speculative_k
+        spec = self.spec
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        index = np.zeros(self.max_batch, np.int32)
+        # dead slots draft at limit -1: limit+1 = 0 gates off every cache
+        # write (a paged dead slot's block table row would alias page 0)
+        limit = np.full(self.max_batch, -1, np.int32)
+        for s in live:
+            req = self.slot_req[s]
+            tokens[s, 0] = req.output[-1] if req.output \
+                else int(req.prompt[-1])
+            index[s] = self.slot_pos[s]
+            # a cycle commits at most limit+1 tokens, so limit =
+            # min(k, remaining-1) never drafts past the request budget
+            # and every cache write stays inside the reserved extent
+            limit[s] = min(k, req.max_new_tokens - len(req.output) - 1)
+        batch = {"tokens": jnp.asarray(tokens)}
+        d_args = (jnp.asarray(spec.block_tables),) if spec.paged else ()
+        with self._mesh_ctx():
+            drafted, spec.caches = spec._draft(
+                spec.params, spec.caches, batch, jnp.asarray(index),
+                jnp.asarray(limit), *d_args)
+        drafted = np.asarray(drafted)                      # [B, k]
+        win = np.zeros((self.max_batch, k + 1), np.int32)  # [t0, d_0..]
+        win[:, 0] = tokens[:, 0]
+        win[:, 1:] = drafted
+        valid = np.maximum(limit + 1, 0)
+        v_args = ()
+        if self.paged:
+            for s in live:
+                lo = int(index[s])
+                self._ensure_writable(s, lo, lo + int(valid[s]))
+            v_args = (jnp.asarray(self.block_tables),)
+        with self._mesh_ctx():
+            logits, self.caches = self._verify(
+                self.params, self.caches, {"tokens": jnp.asarray(win)},
+                jnp.asarray(index), jnp.asarray(valid), *v_args)
+        logits = np.asarray(logits)                        # [B, k+1, V]
+        self.metrics.spec_cycles += 1
+        for s in live:
+            req = self.slot_req[s]
+            lim = int(limit[s])
+            committed = speculative_lib.accept_tokens(
+                logits[s, :lim + 1], drafted[s, :lim],
+                req.sampling or self.sampling, self._slot_rng[s])
+            self.metrics.drafted_tokens += lim
+            self.metrics.accepted_tokens += len(committed) - 1
+            self.metrics.verify_tokens += lim + 1
+            for tok in committed:
+                self.slot_pos[s] += 1
+                self._commit_token(s, int(tok), decode_pass=True)
+                if self.slot_req[s] is None:   # retired mid-window
+                    break
+
     def _emit_token(self, s: int, logits_row: np.ndarray, *,
                     decode_pass: bool):
+        """Sample one token from a logits row and commit it — the plain
+        (non-speculative) emission path.  Sampling goes through
+        speculative.sample_token, the same primitive the speculative
+        bonus/resample path uses, so both paths draw from identical
+        per-slot distributions and rng streams."""
         req = self.slot_req[s]
-        tok = self._sample(logits_row, req.sampling or self.sampling,
-                           self._slot_rng[s])
+        tok = speculative_lib.sample_token(
+            logits_row, req.sampling or self.sampling, self._slot_rng[s])
+        self._commit_token(s, tok, decode_pass=decode_pass)
+
+    def _commit_token(self, s: int, tok: int, *, decode_pass: bool):
+        """Append one already-chosen token to slot ``s``'s request:
+        metrics, TTFT/TPOT stamps, and retirement (slot + page release,
+        draft pages included) when the request hits max_new_tokens."""
+        req = self.slot_req[s]
         req.output.append(int(tok))
         self.metrics.generated_tokens += 1
         if decode_pass:
@@ -579,21 +775,8 @@ class ServingEngine:
                 # page-level retirement: drop this slot's references only;
                 # prefix-index pages keep their index ref and stay cached
                 self._release_slot_pages(s)
-
-    @staticmethod
-    def _sample(logits_row, sp: SamplingParams, rng) -> int:
-        logits_row = np.asarray(logits_row, np.float64)
-        if sp.greedy:
-            return int(np.argmax(logits_row))
-        scaled = logits_row / max(sp.temperature, 1e-6)
-        if sp.top_k > 0:
-            kk = min(sp.top_k, scaled.size)
-            kth = np.partition(scaled, -kk)[-kk]
-            scaled = np.where(scaled < kth, -np.inf, scaled)
-        scaled = scaled - scaled.max()
-        probs = np.exp(scaled)
-        probs /= probs.sum()
-        return int(rng.choice(len(probs), p=probs))
+            if self.spec is not None:
+                self.spec.release_slot(s)
 
     # ------------------------------------------------------------------
     # Reporting / draining
@@ -629,7 +812,9 @@ class ServingEngine:
     def capacity_report(self) -> dict:
         """Cache-capacity accounting: bytes per slot and admitted slots;
         paged engines add physical-vs-logical page counters (pool free /
-        live / shared pages, prefix-hit and COW counts, DESIGN.md §18)."""
+        live / shared pages, prefix-hit and COW counts, DESIGN.md §18);
+        speculative engines add a ``speculative`` section (draft
+        precision + draft pool sizing, DESIGN.md §19)."""
         rep = {
             "kv_bits": getattr(self.cfg.quant, "kv_bits", 0) or 16,
             "cache_bytes_per_slot": self.cache_bytes_per_slot,
@@ -649,6 +834,8 @@ class ServingEngine:
                 peak_live_slot_count=self.peak_live_slots,
                 prefix_sharing=self._share,
                 **self.pool.report())
+        if self.spec is not None:
+            rep["speculative"] = self.spec.describe()
         if self.shard_plan is not None:
             rep["shard_plan"] = self.shard_plan.describe()
         return rep

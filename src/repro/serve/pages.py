@@ -101,7 +101,13 @@ class _Node:
 
 
 class PagePool:
-    """Refcounted page pool + radix-style prefix index (module docstring).
+    """Refcounted page pool + radix-style prefix index (DESIGN.md §18;
+    the module docstring carries the layout story).
+
+    Units: ``page_size`` counts token *rows*, not bytes, and must pass
+    :func:`validate_page_size` — a multiple of the sub-byte word-packing
+    granularity (8 rows at 4-bit KV, 16 at 2-bit) so every page holds
+    whole packed words and dequantizes independently.
 
     Refcount convention: ``alloc`` hands pages out at ref 1 (the caller's
     block-table reference); ``retain``/``release`` adjust for sharing; a

@@ -34,7 +34,8 @@ def _is_packed(node) -> bool:
 
 
 def prepare_serving_params(params, cfg, *, dense_store: bool = False,
-                           autotune: bool = False, tune_rows: int = 8):
+                           autotune: bool = False, tune_rows: int = 8,
+                           recalibrate: bool = False):
     """Recursively pack all quantizable Dense leaves.
 
     ``autotune=True`` sweeps the lane-layout family per distinct (k, n)
@@ -42,6 +43,12 @@ def prepare_serving_params(params, cfg, *, dense_store: bool = False,
     weights pack once offline, so the layout decision must be weighed here;
     pack_dense_params then resolves each layer's chosen spec from the same
     cache, and build_layer_plans / dispatch resolve identically later.
+
+    ``recalibrate=True`` drops each leaf's learned ``w_step``/``a_step``
+    before packing so scales re-derive (absmax / qmax default) for
+    ``cfg.quant``'s bit widths — the speculative-draft repack path
+    (DESIGN.md §19), where the SAME checkpoint packs at a lower precision
+    than its QAT steps were calibrated for.
     """
     if not cfg.quant.enabled:
         return params
@@ -55,6 +62,9 @@ def prepare_serving_params(params, cfg, *, dense_store: bool = False,
                 autotune_lib.tune_matmul_layout(
                     tune_rows, int(k), int(n),
                     PackSpec.from_config(cfg.quant), weight_store=store)
+            if recalibrate:
+                node = {k: v for k, v in node.items()
+                        if k not in ("w_step", "a_step")}
             return common.pack_dense_params(node, cfg.quant,
                                             dense_store=dense_store)
         if isinstance(node, dict):

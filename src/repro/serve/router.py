@@ -106,6 +106,14 @@ def aggregate_reports(metrics_list) -> dict:
         "mean_admission_wait_s": round(div(
             sum(m.admission_wait_s for m in ms),
             sum(m.admitted for m in ms)), 5),
+        # speculative ledger (DESIGN.md §19): counters sum, acceptance
+        # re-divides from fleet totals like occupancy does
+        "drafted_tokens": sum(m.drafted_tokens for m in ms),
+        "accepted_tokens": sum(m.accepted_tokens for m in ms),
+        "verify_tokens": sum(m.verify_tokens for m in ms),
+        "spec_cycles": sum(m.spec_cycles for m in ms),
+        "acceptance_rate": round(div(sum(m.accepted_tokens for m in ms),
+                                     sum(m.drafted_tokens for m in ms)), 3),
         "ttft_s": Metrics._dist(ttft),
         "tpot_s": Metrics._dist(tpot),
     }
@@ -166,9 +174,12 @@ class Router:
                uid: int | None = None) -> Handle:
         """Admit one request to the fleet; returns its :class:`Handle`.
 
+        ``prompt`` is a 1-D array of int32 token ids; ``max_new_tokens``
+        bounds the generated length (tokens, EOS may stop earlier).
         Oversize requests (prompt + max_new_tokens > max_len) raise
         immediately; everything else is either placed on a replica now or
-        parked in the spillover queue until one has room.
+        parked in the spillover queue until one has room.  Placement is
+        least-loaded with ``session`` affinity (DESIGN.md §17).
         """
         prompt = np.asarray(prompt, np.int32)
         if len(prompt) + max_new_tokens > self.config.max_len:

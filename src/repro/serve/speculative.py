@@ -1,0 +1,283 @@
+"""Speculative decoding with a sub-byte draft model (DESIGN.md §19).
+
+The paper's W2A2 packed kernels run ~3.2x faster than the 16-bit baseline
+on the same substrate; this module turns that footprint/throughput win
+into a decode-latency win.  A second copy of the SAME checkpoint is
+packed at ``draft_w_bits`` (2-bit by default, ~1/8 the bytes of 8-bit)
+and drafts ``k`` greedy tokens per slot in one launch
+(launch/steps.make_draft_step); the target model then scores the whole
+drafted chain in ONE ``[B, k+1]`` chunked call
+(launch/steps.make_verify_chunk_step — the prefill-chunk window shape of
+PR 2, returning every position's logits).  Host-side rejection sampling
+commits the longest target-faithful prefix.
+
+Correctness (the rejection rule, greedy-draft / delta-proposal form):
+the draft proposes ``d`` deterministically, i.e. proposal q = delta_d.
+Accept ``d`` with probability ``p(d)`` where ``p`` is the TARGET
+distribution after the slot's temperature/top-k transform (`probs_for`,
+the same transform engine sampling uses).  On rejection, resample from
+``p`` with ``d`` masked out, renormalized.  The committed token's
+marginal is then  p(d)·1[t=d] + (1-p(d))·p(t)/(1-p(d))·1[t≠d] = p(t)
+for every t — exactly target-only sampling, so speculative decoding
+changes throughput, never the output distribution.  At temperature 0 the
+rule degenerates to argmax equality and the output is token-for-token
+identical to plain decode.  When all ``k`` drafts are accepted, the
+verify window's last row is a free (k+1)-th distribution — the bonus
+token — so a cycle commits between 1 and k+1 tokens.
+
+Cache bookkeeping: verify writes K/V for positions
+``pos .. pos + limit`` with the usual valid-prefix gating; chunked
+writes equal sequential writes (PR 2), so the accepted prefix's rows are
+already exact and the rejected suffix is stale garbage that attention
+masks until a later pass overwrites it — rollback is simply not
+advancing ``slot_pos``.  The draft keeps its own caches (and, paged, its
+own small page pool sized ``max_batch × pages_per_slot`` with no prefix
+sharing: drafts always replay the full prompt, because a target-side
+prefix skip would leave the draft cache without those rows).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.serve.config import EngineConfig, SamplingParams
+
+__all__ = ["DraftModel", "accept_tokens", "draft_model_config",
+           "probs_for", "sample_token"]
+
+
+# ---------------------------------------------------------------------------
+# Sampling math (shared with ServingEngine._sample)
+# ---------------------------------------------------------------------------
+
+def probs_for(logits_row, sp: SamplingParams) -> np.ndarray:
+    """The slot's target distribution: temperature / top-k transform of
+    one logits row, in float64 (host-side, deterministic across
+    platforms).  This is THE transform engine sampling applies, factored
+    out so accept/reject scores drafts against exactly the distribution
+    plain decode would have sampled from.  Greedy (temperature <= 0) has
+    no distribution — callers special-case argmax."""
+    scaled = np.asarray(logits_row, np.float64) / max(sp.temperature, 1e-6)
+    if sp.top_k > 0:
+        kk = min(sp.top_k, scaled.size)
+        kth = np.partition(scaled, -kk)[-kk]
+        scaled = np.where(scaled < kth, -np.inf, scaled)
+    scaled = scaled - scaled.max()
+    probs = np.exp(scaled)
+    probs /= probs.sum()
+    return probs
+
+
+def sample_token(logits_row, sp: SamplingParams, rng) -> int:
+    """Sample one token (greedy / temperature / top-k) from a logits row
+    with the slot's numpy Generator — the single sampling primitive both
+    plain decode and the speculative bonus/resample path go through."""
+    if sp.greedy:
+        return int(np.argmax(np.asarray(logits_row, np.float64)))
+    probs = probs_for(logits_row, sp)
+    return int(rng.choice(len(probs), p=probs))
+
+
+def accept_tokens(window_logits, drafted, sp: SamplingParams,
+                  rng) -> list[int]:
+    """Rejection-sample one speculative cycle for one slot.
+
+    ``window_logits`` [w, vocab] are the verify pass's full-window rows,
+    ``w == len(drafted) + 1``: row ``i`` is the target distribution for
+    the token FOLLOWING the i-th window token, i.e. it scores
+    ``drafted[i]``; the last row is the bonus distribution used only
+    when every draft is accepted.  Returns the committed tokens, length
+    1..w: accepted drafts, then exactly one target-sampled token (the
+    rejection resample, or the bonus).  ``len(result) - 1`` drafts were
+    accepted — the Metrics acceptance counter.
+    """
+    out: list[int] = []
+    for i, d in enumerate(drafted):
+        d = int(d)
+        row = window_logits[i]
+        if sp.greedy:
+            t = int(np.argmax(np.asarray(row, np.float64)))
+            out.append(t)
+            if t != d:
+                return out
+            continue
+        p = probs_for(row, sp)
+        if rng.random() < p[d]:
+            out.append(d)
+            continue
+        q = p.copy()
+        q[d] = 0.0
+        tot = q.sum()
+        if tot <= 0.0:
+            # p was numerically a point mass on d; rejection then had
+            # probability ~0 — committing d keeps the marginal exact
+            out.append(d)
+            continue
+        out.append(int(rng.choice(len(q), p=q / tot)))
+        return out
+    out.append(sample_token(window_logits[len(drafted)], sp, rng))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Draft config + per-engine draft state
+# ---------------------------------------------------------------------------
+
+def draft_model_config(cfg, econf: EngineConfig):
+    """The draft model's config: the target config with its quantization
+    dropped to ``draft_w_bits`` (weights AND activations — the paper's
+    symmetric fast corner; W2A2 by default) and, optionally,
+    ``draft_kv_bits`` for the draft KV cache.  Lane-layout fields reset
+    to the int16 x2 default so the draft packs under a layout that is
+    always feasible at sub-byte widths.  On an unpacked (or
+    quant-disabled) engine the draft IS the target config: same float
+    params, and the speculative win reduces to launch amortization.
+    """
+    q = cfg.quant
+    if not (econf.packed and q.enabled):
+        return cfg
+    kv = q.kv_bits if econf.draft_kv_bits is None else econf.draft_kv_bits
+    dq = q.replace(w_bits=econf.draft_w_bits,
+                   a_bits=min(q.a_bits, econf.draft_w_bits),
+                   kv_bits=kv,
+                   lane_dtype="int16", n_pack=2, pack_shift=None)
+    return cfg.replace(quant=dq)
+
+
+class DraftModel:
+    """Draft-side serving state for one :class:`ServingEngine`.
+
+    Owns the re-packed draft param tree, its KernelPlans, its caches,
+    and — paged — its own page pool and block tables.  The pool is
+    sized ``max_batch × pages_per_slot`` (worst case, no sharing), so a
+    draft reservation can never fail after the target's succeeded; at
+    2-bit KV that worst case costs ~1/8 of the equivalent bf16 pool
+    (DESIGN.md §19 sizing math).  Per-slot state: ``fed`` (prompt tokens
+    the draft has consumed — the draft replays the FULL prompt even when
+    the target prefix-skips) and the stashed first-token logits for
+    slots whose target finished prefilling before the draft did.
+    """
+
+    def __init__(self, cfg, raw_params, econf: EngineConfig, *,
+                 max_batch: int, max_len: int, shard_plan=None, mesh=None,
+                 tp_axis=None):
+        from repro.launch import steps as steps_lib
+        from repro.models import lm
+        from repro.serve import pages as pages_lib
+        from repro.serve.prepare import (build_layer_plans,
+                                         prepare_serving_params)
+
+        self.k = econf.speculative_k
+        self.cfg = draft_model_config(cfg, econf)
+        self.max_batch = max_batch
+        self.max_len = max_len
+        packed = econf.packed and self.cfg.quant.enabled
+        self.packed = packed
+        # Re-pack the SAME checkpoint at the draft precision.  recalibrate
+        # drops the QAT-learned step sizes (calibrated for the target
+        # bits) so absmax re-derives scales for the draft grid — but only
+        # when the grids actually differ: at matching bit widths the
+        # learned steps are already the right ones, and keeping them
+        # makes the draft numerically the target (acceptance ~1).
+        recalib = (self.cfg.quant.w_bits != cfg.quant.w_bits
+                   or self.cfg.quant.a_bits != cfg.quant.a_bits)
+        self.params = prepare_serving_params(
+            raw_params, self.cfg, dense_store=econf.dense_store,
+            autotune=econf.autotune, recalibrate=recalib) \
+            if packed else raw_params
+        self.plans = build_layer_plans(
+            self.params, self.cfg, batch_rows=max_batch,
+            prefill_rows=max_batch * econf.prefill_chunk,
+            autotune=econf.autotune,
+            shard_plan=shard_plan) if packed else {}
+        if shard_plan is not None:
+            self.params = shard_plan.place_params(self.params)
+        self._draft, _ = steps_lib.jitted_speculative_steps(
+            cfg, self.cfg, self.k, kv_shard_axis=tp_axis, mesh=mesh)
+        # draft prefill reuses the ordinary chunked-prefill step (logits
+        # discarded) — memoized per draft config like any serving step
+        _, self._prefill = steps_lib.jitted_serving_steps(
+            self.cfg, kv_shard_axis=tp_axis, mesh=mesh)
+        self.paged = econf.paged
+        kv_bits = getattr(self.cfg.quant, "kv_bits", 0)
+        if self.paged:
+            pages_lib.validate_page_size(econf.page_size, kv_bits)
+            self.page_size = econf.page_size
+            self.pages_per_slot = -(-max_len // econf.page_size)
+            self.num_pages = max_batch * self.pages_per_slot
+            self.page_bytes = lm.cache_page_bytes(self.cfg, self.page_size)
+            self.caches = lm.init_caches(self.cfg, max_batch, max_len,
+                                         page_size=self.page_size,
+                                         num_pages=self.num_pages)
+            self.pool = pages_lib.PagePool(self.num_pages, self.page_size,
+                                           kv_bits)
+            self.block_tables = np.zeros((max_batch, self.pages_per_slot),
+                                         np.int32)
+            self._extent = [0] * max_batch
+        else:
+            self.caches = lm.init_caches(self.cfg, max_batch, max_len)
+        if shard_plan is not None:
+            self.caches = shard_plan.place_caches(
+                self.caches, self.cfg, max_batch, paged=self.paged)
+        self.fed = np.zeros(max_batch, np.int32)
+        self._stash: dict[int, np.ndarray] = {}
+
+    # -- per-slot lifecycle --------------------------------------------
+
+    def begin_slot(self, slot: int, req) -> None:
+        """Reset draft bookkeeping at admission and, paged, reserve the
+        slot's full write extent (guaranteed to succeed — pool sizing)."""
+        self.fed[slot] = 0
+        self._stash.pop(slot, None)
+        if self.paged:
+            written = len(req.prompt) + req.max_new_tokens - 1
+            n_pages = -(-written // self.page_size)
+            got = self.pool.alloc(n_pages)
+            if got is None:  # unreachable by sizing; fail loudly if not
+                raise RuntimeError(
+                    f"draft page pool exhausted for slot {slot}: asked "
+                    f"{n_pages} of {self.num_pages} pages")
+            table = self.block_tables[slot]
+            table[:] = 0
+            table[:n_pages] = got
+            self._extent[slot] = n_pages
+
+    def release_slot(self, slot: int) -> None:
+        self._stash.pop(slot, None)
+        if self.paged:
+            for p in self.block_tables[slot][:self._extent[slot]]:
+                self.pool.release(int(p))
+            self.block_tables[slot][:] = 0
+            self._extent[slot] = 0
+
+    # -- prompt stash (target prefix-skipped ahead of the draft) --------
+
+    def prompt_done(self, slot: int, req) -> bool:
+        return int(self.fed[slot]) >= len(req.prompt)
+
+    def stash(self, slot: int, logits_row: np.ndarray) -> None:
+        self._stash[slot] = logits_row
+
+    def pop_stash(self, slot: int):
+        return self._stash.pop(slot, None)
+
+    def has_stash(self, slot: int) -> bool:
+        return slot in self._stash
+
+    # -- reporting ------------------------------------------------------
+
+    def describe(self) -> dict:
+        """capacity_report section: draft precision + pool sizing."""
+        rep = {
+            "speculative_k": self.k,
+            "draft_w_bits": self.cfg.quant.w_bits if self.packed else 0,
+            "draft_a_bits": self.cfg.quant.a_bits if self.packed else 0,
+            "draft_kv_bits": (getattr(self.cfg.quant, "kv_bits", 0) or 16)
+            if self.packed else 16,
+            "draft_packed": self.packed,
+        }
+        if self.paged:
+            rep.update(draft_num_pages=self.num_pages,
+                       draft_page_bytes=self.page_bytes,
+                       draft_pool_bytes=self.num_pages * self.page_bytes)
+        return rep

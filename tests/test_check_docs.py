@@ -1,0 +1,52 @@
+"""tools/check_docs.py — the CI docs link-checker (doc-rot gate)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tools"))
+
+import check_docs  # noqa: E402
+
+
+class TestSlugs:
+    def test_github_slug_rules(self):
+        assert check_docs.github_slug("§19 Speculative decoding") == \
+            "19-speculative-decoding"
+        assert check_docs.github_slug(
+            "§2 vmacsr → MXU-tile epilogue mapping") == \
+            "2-vmacsr--mxu-tile-epilogue-mapping"
+        assert check_docs.github_slug("Packing algebra (P1/P4)") == \
+            "packing-algebra-p1p4"
+
+    def test_duplicate_headings_get_github_suffixes(self):
+        slugs = check_docs.heading_slugs("# Same\n\n# Same\n")
+        assert slugs == {"same", "same-1"}
+
+    def test_fenced_code_blocks_are_not_headings(self):
+        text = "# Real\n\n```\n# not a heading\n```\n"
+        assert check_docs.heading_slugs(text) == {"real"}
+
+
+class TestRepoDocs:
+    def test_committed_docs_are_rot_free(self, capsys):
+        """Acceptance: the checked-in front-door docs pass — anchors,
+        file links, backticked code paths, and §N citations across
+        src/tests/benchmarks/tools all resolve."""
+        assert check_docs.main([]) == 0
+
+    def test_injected_rot_fails(self, tmp_path, capsys):
+        (tmp_path / "other.md").write_text("# Only heading\n")
+        bad = tmp_path / "bad.md"
+        bad.write_text(
+            "[a](other.md#no-such-anchor)\n"
+            "[b](missing/file.py)\n"
+            "`serve/nonexistent_module.py`\n"
+            # built via chr() so THIS source file (also scanned by the
+            # checker's tests/*.py sweep) doesn't cite a bogus section
+            "DESIGN.md " + chr(0xA7) + "99\n")
+        rel = os.path.relpath(bad, check_docs.ROOT)
+        assert check_docs.main([rel]) == 1
+        err = capsys.readouterr().err
+        for needle in ("broken anchor", "broken link target",
+                       "does not exist", "no such section"):
+            assert needle in err

@@ -58,6 +58,40 @@ class TestCompare:
         findings = compare.compare(BASE, _cur(mutate), tolerance=0.25)
         assert compare.gate_failures(findings) == []
 
+    def test_floor_violation_fails_even_within_tolerance(self):
+        """A row-level floor is a hard same-run bound on the CURRENT run:
+        it fails the gate even when the delta vs baseline is tiny, and
+        even when the baseline itself sits below the floor (a refreshed
+        baseline cannot launder a broken floor)."""
+        def floored(value):
+            def mutate(c):
+                c["serve"]["rows"]["engine"].append(
+                    {"case": "speculative/draft-verify",
+                     "speculative_speedup": value,
+                     "floor": {"speculative_speedup": 1.5}})
+            return mutate
+
+        # passing: current >= floor, regardless of baseline state
+        findings = compare.compare(_cur(floored(1.4)), _cur(floored(2.0)))
+        floors = [f for f in findings if f["metric"].endswith("(floor)")]
+        assert [f["status"] for f in floors] == ["ok"]
+        # failing: current < floor, baseline identical (delta 0%)
+        findings = compare.compare(_cur(floored(1.2)), _cur(floored(1.2)))
+        fails = compare.gate_failures(findings)
+        assert [(f["metric"], f["status"]) for f in fails] == \
+            [("speculative_speedup (floor)", "below-floor")]
+        assert fails[0]["base"] == 1.5 and fails[0]["cur"] == 1.2
+
+    def test_floor_metric_missing_from_row_fails(self):
+        def mutate(c):
+            c["serve"]["rows"]["engine"].append(
+                {"case": "speculative/draft-verify",
+                 "floor": {"speculative_speedup": 1.5}})
+
+        fails = compare.gate_failures(compare.compare(BASE, _cur(mutate)))
+        assert [f["status"] for f in fails] == ["below-floor"]
+        assert fails[0]["cur"] is None
+
     def test_near_unity_speedup_is_report_only(self):
         """A baseline speedup inside NEAR_UNITY_BAND recorded no material
         win; its collapse reports but cannot fail CI on runner noise."""

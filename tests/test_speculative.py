@@ -1,0 +1,296 @@
+"""Speculative decoding (DESIGN.md §19): rejection-sampling exactness at
+the unit level, engine-level token-for-token identity at temperature 0,
+statistical match at temperature > 0, paged + prefix-sharing composition
+(the draft full-prompt-replay stash path), and config validation."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.quant import QuantConfig
+from repro.models import lm
+from repro.serve import speculative as spec_lib
+from repro.serve.config import EngineConfig, SamplingParams
+from repro.serve.engine import Request, ServingEngine
+
+
+def float_cfg(name="stablelm-1.6b", **kw):
+    cfg = configs.get_config(name, reduced=True)
+    return cfg.replace(param_dtype="float32", compute_dtype="float32",
+                       quant=QuantConfig(enabled=False),
+                       capacity_factor=8.0, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Unit level: the rejection rule's output distribution
+# ---------------------------------------------------------------------------
+
+def test_accept_tokens_greedy_is_argmax_prefix():
+    """Greedy accept/reject: committed tokens are the target argmaxes,
+    stopping right after the first draft mismatch."""
+    vocab = 5
+    rows = np.full((4, vocab), -10.0)
+    argmaxes = [2, 0, 3, 1]
+    for i, a in enumerate(argmaxes):
+        rows[i, a] = 1.0
+    sp = SamplingParams(temperature=0.0)
+    rng = np.random.default_rng(0)
+    # drafts match rows 0-1, mismatch at row 2 -> commit argmax there, stop
+    out = spec_lib.accept_tokens(rows, np.array([2, 0, 4]), sp, rng)
+    assert out == [2, 0, 3]
+    # all drafts match -> bonus token from the last row
+    out = spec_lib.accept_tokens(rows, np.array([2, 0, 3]), sp, rng)
+    assert out == [2, 0, 3, 1]
+    # empty draft (limit 0) degenerates to plain sampling from row 0
+    out = spec_lib.accept_tokens(rows[:1], np.array([], np.int32), sp, rng)
+    assert out == [2]
+
+
+def _first_token_histogram(row, drafted, sp, trials, seed):
+    counts = np.zeros(row.shape[-1])
+    rng = np.random.default_rng(seed)
+    for _ in range(trials):
+        out = spec_lib.accept_tokens(row[None].repeat(2, 0), drafted, sp,
+                                     rng)
+        counts[out[0]] += 1
+    return counts / trials
+
+
+@pytest.mark.parametrize("draft_tok", [0, 3])
+def test_accept_tokens_marginal_matches_target(draft_tok):
+    """The committed first token's marginal equals target-only sampling
+    p(t) for any draft proposal — the exactness guarantee, checked
+    empirically: accept-d-w.p.-p(d) + masked resample must reproduce p
+    whether the draft proposed a likely (0) or unlikely (3) token."""
+    rng0 = np.random.default_rng(42)
+    row = rng0.normal(size=7) * 2.0
+    sp = SamplingParams(temperature=0.8, top_k=4)
+    p = spec_lib.probs_for(row, sp)
+    trials = 20_000
+    hist = _first_token_histogram(row, np.array([draft_tok]), sp, trials,
+                                  seed=draft_tok)
+    assert 0.5 * np.abs(hist - p).sum() < 0.02  # total variation
+
+
+def test_sample_token_matches_probs_for():
+    """sample_token is the one sampling primitive: greedy is argmax, and
+    stochastic draws follow probs_for's transform."""
+    rng0 = np.random.default_rng(7)
+    row = rng0.normal(size=6)
+    assert spec_lib.sample_token(row, SamplingParams(), None) \
+        == int(np.argmax(row))
+    sp = SamplingParams(temperature=0.5, top_k=3)
+    p = spec_lib.probs_for(row, sp)
+    assert np.all(p[np.argsort(row)[:3]] == 0)   # outside top-k masked
+    rng = np.random.default_rng(8)
+    draws = np.bincount([spec_lib.sample_token(row, sp, rng)
+                         for _ in range(8000)], minlength=6) / 8000
+    assert 0.5 * np.abs(draws - p).sum() < 0.03
+
+
+# ---------------------------------------------------------------------------
+# Engine level: identity / statistical match vs target-only decode
+# ---------------------------------------------------------------------------
+
+def _run_engine(cfg, params, prompts, *, max_new=6, sampling=None,
+                **eng_kw):
+    eng = ServingEngine(cfg, params, config=EngineConfig(
+        max_batch=2, max_len=32, prefill_chunk=4,
+        sampling=sampling or SamplingParams(), **eng_kw))
+    for i, p in enumerate(prompts):
+        assert eng.submit(Request(uid=i, prompt=p, max_new_tokens=max_new))
+    done = {r.uid: tuple(r.output) for r in eng.run_to_completion()}
+    return done, eng
+
+
+@pytest.fixture(scope="module")
+def float_model():
+    cfg = float_cfg()
+    params = lm.init_params(jax.random.PRNGKey(5), cfg)
+    rng = np.random.default_rng(10)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (7, 3, 11)]
+    return cfg, params, prompts
+
+
+@pytest.mark.parametrize("k", [2, 4])
+def test_engine_speculative_greedy_identity(k, float_model):
+    """At temperature 0 speculative decode is token-for-token the plain
+    engine's output, for k in {2, 4}; every drafted token the (identical)
+    draft proposes is accepted."""
+    cfg, params, prompts = float_model
+    base, _ = _run_engine(cfg, params, prompts, packed=False)
+    got, eng = _run_engine(cfg, params, prompts, packed=False,
+                           speculative_k=k)
+    assert got == base
+    rep = eng.metrics.report()
+    assert rep["spec_cycles"] > 0
+    assert rep["drafted_tokens"] > 0
+    # float draft == float target, greedy: drafts always match
+    assert rep["acceptance_rate"] == 1.0
+    assert rep["accepted_tokens"] <= rep["drafted_tokens"]
+    # each (slot, cycle) participation verifies its drafts + 1 bonus row;
+    # spec_cycles counts PASSES, so it lower-bounds participations (a
+    # pass may carry up to max_batch live slots)
+    overhead = rep["verify_tokens"] - rep["drafted_tokens"]
+    assert rep["spec_cycles"] <= overhead <= 2 * rep["spec_cycles"]
+
+
+def test_engine_speculative_sampled_statistical_match(float_model):
+    """temperature > 0: rejection sampling must reproduce target-only
+    sampling in distribution, not token-for-token (the rng streams
+    advance differently).  Checked at matched seeds: every request's
+    FIRST token is identical (sampled pre-speculation from the same
+    logits with a freshly-seeded per-slot rng), and across many
+    same-prompt requests — each uid is an independent rng stream — the
+    SECOND token's histogram, conditioned on a shared first token and
+    with top_k=2 bounding its support, matches the plain engine's."""
+    cfg, params, _ = float_model
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, cfg.vocab_size, 5).astype(np.int32)
+    n_req = 48
+    prompts = [prompt] * n_req
+    sp = SamplingParams(temperature=1.5, top_k=2, seed=3)
+    base, _ = _run_engine(cfg, params, prompts, packed=False, sampling=sp,
+                          max_new=3)
+    got, eng = _run_engine(cfg, params, prompts, packed=False, sampling=sp,
+                           max_new=3, speculative_k=2)
+    assert eng.metrics.report()["spec_cycles"] > 0
+    for uid in base:
+        assert got[uid][0] == base[uid][0]
+    # second token, conditioned on the modal first token: same prompt +
+    # same t1 = same target conditional, support <= 2 under top_k=2
+    t1 = np.array([base[u][0] for u in sorted(base)])
+    modal = np.bincount(t1).argmax()
+    keep = [u for u in sorted(base) if base[u][0] == modal]
+    assert len(keep) >= 12                    # enough conditioned samples
+    vals = sorted({base[u][1] for u in keep} | {got[u][1] for u in keep})
+    hb = np.array([[base[u][1] for u in keep].count(v) for v in vals],
+                  np.float64) / len(keep)
+    hg = np.array([[got[u][1] for u in keep].count(v) for v in vals],
+                  np.float64) / len(keep)
+    assert 0.5 * np.abs(hb - hg).sum() < 0.35, (hb, hg)
+
+
+def test_engine_speculative_paged_prefix_sharing_identity(float_model):
+    """paged + prefix sharing + speculation compose: the target
+    prefix-skips a shared prompt while the draft replays it in full (the
+    first-token stash path), and outputs still match plain paged decode
+    token for token."""
+    cfg, params, _ = float_model
+    rng = np.random.default_rng(12)
+    shared = rng.integers(0, cfg.vocab_size, 9).astype(np.int32)
+    prompts = [shared,
+               np.concatenate([shared[:6], rng.integers(
+                   0, cfg.vocab_size, 4).astype(np.int32)]),
+               shared.copy()]
+    base, _ = _run_engine(cfg, params, prompts, packed=False, paged=True,
+                          page_size=4, max_new=5)
+    got, eng = _run_engine(cfg, params, prompts, packed=False, paged=True,
+                           page_size=4, max_new=5, speculative_k=3)
+    assert got == base
+    assert eng.pool.prefix_hits >= 1          # sharing actually engaged
+    assert eng.metrics.report()["acceptance_rate"] == 1.0
+    # draft pool fully drained back after retirement
+    assert eng.spec.pool.report()["free_pages"] == eng.spec.num_pages
+
+
+def test_engine_packed_draft_identity_and_report():
+    """A packed engine re-packs the draft at draft_w_bits; outputs still
+    equal target-only greedy decode regardless of draft fidelity, and the
+    capacity report carries the draft precision."""
+    cfg = configs.get_config("stablelm-1.6b", reduced=True)
+    cfg = cfg.replace(param_dtype="float32", compute_dtype="float32",
+                      capacity_factor=8.0,
+                      quant=cfg.quant.replace(w_bits=4, a_bits=4,
+                                              lane_dtype="int32",
+                                              pack_shift=None))
+    params = lm.init_params(jax.random.PRNGKey(6), cfg)
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (7, 3)]
+    base, _ = _run_engine(cfg, params, prompts, packed=True)
+    got, eng = _run_engine(cfg, params, prompts, packed=True,
+                           speculative_k=2, draft_w_bits=2)
+    assert got == base
+    spec_rep = eng.capacity_report()["speculative"]
+    assert spec_rep["draft_packed"] is True
+    assert spec_rep["draft_w_bits"] == 2
+    assert eng.spec.cfg.quant.w_bits == 2
+    assert cfg.quant.w_bits == 4              # target untouched
+
+
+def test_same_bits_draft_keeps_learned_steps(float_model):
+    """When draft bits == target bits the repack keeps the QAT-learned
+    step sizes (no recalibration), so the draft IS the target numerically
+    and greedy acceptance is exactly 1."""
+    cfg = configs.get_config("stablelm-1.6b", reduced=True).replace(
+        param_dtype="float32", compute_dtype="float32", capacity_factor=8.0)
+    params = lm.init_params(jax.random.PRNGKey(7), cfg)
+    rng = np.random.default_rng(14)
+    prompts = [rng.integers(0, cfg.vocab_size, 5).astype(np.int32)
+               for _ in range(2)]
+    got, eng = _run_engine(cfg, params, prompts, packed=True,
+                           speculative_k=2,
+                           draft_w_bits=cfg.quant.w_bits)
+    assert eng.metrics.report()["acceptance_rate"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Config surface
+# ---------------------------------------------------------------------------
+
+def test_engine_config_speculative_validation():
+    with pytest.raises(ValueError, match="speculative_k"):
+        EngineConfig(speculative_k=-1)
+    with pytest.raises(ValueError, match="draft_w_bits"):
+        EngineConfig(speculative_k=2, draft_w_bits=8)
+    with pytest.raises(ValueError, match="draft_kv_bits"):
+        EngineConfig(speculative_k=2, draft_kv_bits=3)
+    # draft fields are unchecked while speculation is off
+    EngineConfig(speculative_k=0, draft_w_bits=8)
+
+
+def test_engine_rejects_unsupported_stacks_for_speculation():
+    cfg = float_cfg("mixtral-8x7b").replace(sliding_window=6)
+    params = lm.init_params(jax.random.PRNGKey(8), cfg)
+    with pytest.raises(ValueError, match="sliding-window"):
+        ServingEngine(cfg, params, config=EngineConfig(
+            packed=False, speculative_k=2))
+
+
+def test_from_args_speculative_fields():
+    ns = dataclasses.make_dataclass("NS", [
+        ("max_batch", int, 2), ("max_len", int, 64),
+        ("no_packed", bool, True), ("prefill_chunk", int, 16),
+        ("max_queue", int, 0), ("temperature", float, 0.0),
+        ("top_k", int, 0), ("hbm_cache_budget_mb", float, 0),
+        ("autotune", bool, False), ("speculative_k", int, 3),
+        ("draft_w_bits", int, 2), ("draft_kv_bits", int, -1)])()
+    econf = EngineConfig.from_args(ns)
+    assert econf.speculative_k == 3
+    assert econf.draft_w_bits == 2
+    assert econf.draft_kv_bits is None        # -1 sentinel -> inherit
+    ns2 = dataclasses.replace(ns, draft_kv_bits=4)
+    assert EngineConfig.from_args(ns2).draft_kv_bits == 4
+
+
+def test_draft_model_config_precision_drop():
+    cfg = configs.get_config("stablelm-1.6b", reduced=True).replace(
+        quant=configs.get_config("stablelm-1.6b",
+                                 reduced=True).quant.replace(
+            w_bits=4, a_bits=4, lane_dtype="int32", pack_shift=None,
+            kv_bits=4))
+    econf = EngineConfig(speculative_k=2, draft_w_bits=2)
+    dcfg = spec_lib.draft_model_config(cfg, econf)
+    assert dcfg.quant.w_bits == 2 and dcfg.quant.a_bits == 2
+    assert dcfg.quant.kv_bits == 4            # inherited
+    assert dcfg.quant.lane_dtype == "int16"   # always-feasible layout
+    over = EngineConfig(speculative_k=2, draft_w_bits=2, draft_kv_bits=2)
+    assert spec_lib.draft_model_config(cfg, over).quant.kv_bits == 2
+    # unpacked engine: draft IS the target config
+    un = EngineConfig(packed=False, speculative_k=2)
+    assert spec_lib.draft_model_config(cfg, un) is cfg

@@ -1,0 +1,144 @@
+#!/usr/bin/env python
+"""Docs link-checker: fail fast on doc rot (CI lint lane).
+
+Checks, over the repo's markdown front doors (README.md, DESIGN.md,
+reports/README.md):
+
+* **Internal anchors** — every markdown link of the form
+  ``[text](FILE.md#anchor)`` or ``[text](#anchor)`` must resolve to a
+  heading in the target file under GitHub's slug rules (lowercase,
+  punctuation stripped, spaces to hyphens — ``## §19 Speculative
+  decoding`` -> ``#19-speculative-decoding...``).
+* **Relative file links** — ``[text](path)`` must name a file or
+  directory that exists in the checkout.
+* **Backticked code paths** — any `` `a/b.py` ``-style token (must
+  contain a ``/`` — bare filenames like ``BENCH_serve.json`` are often
+  generated artifacts) must exist at the repo root or under ``src/``,
+  ``src/repro/``, or ``.github/workflows/``.
+* **DESIGN.md § citations** — every ``DESIGN.md §N`` reference in the
+  checked docs AND in ``src/ tests/ benchmarks/ tools/`` sources must
+  cite a section that exists (section numbers are stable, so a dangling
+  citation means a typo, not a renumbering).
+
+Run:  python tools/check_docs.py        (exit 0 clean, 1 with findings)
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DOCS = ("README.md", "DESIGN.md", "reports/README.md")
+SOURCE_GLOBS = ("src/**/*.py", "tests/*.py", "benchmarks/*.py",
+                "tools/*.py")
+# roots tried, in order, when resolving a backticked code path
+PATH_ROOTS = ("", "src", "src/repro", ".github/workflows")
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING = re.compile(r"^(#{1,6})\s+(.*?)\s*$", re.M)
+_BACKTICK_PATH = re.compile(r"`([\w][\w./\-]*/[\w.\-]+\.\w{1,6})`")
+_SECTION_REF = re.compile(r"DESIGN\.md\s+§(\d+)")
+_FENCE = re.compile(r"^```.*?^```", re.M | re.S)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, drop punctuation (keeps word
+    chars incl. unicode, spaces, hyphens), spaces -> hyphens."""
+    s = re.sub(r"[^\w\- ]", "", heading.lower())
+    return s.replace(" ", "-")
+
+
+def heading_slugs(text: str) -> set[str]:
+    slugs: set[str] = set()
+    counts: dict[str, int] = {}
+    for m in _HEADING.finditer(_FENCE.sub("", text)):
+        base = github_slug(m.group(2))
+        n = counts.get(base, 0)
+        counts[base] = n + 1
+        slugs.add(base if n == 0 else f"{base}-{n}")  # GitHub dedup rule
+    return slugs
+
+
+def design_sections(text: str) -> set[int]:
+    return {int(m.group(1))
+            for m in re.finditer(r"^##\s+§(\d+)\b", text, re.M)}
+
+
+def check_doc(doc: Path, slug_cache: dict[Path, set[str]]) -> list[str]:
+    problems: list[str] = []
+    text = doc.read_text()
+    rel = os.path.relpath(doc, ROOT)
+
+    def slugs_of(path: Path) -> set[str]:
+        if path not in slug_cache:
+            slug_cache[path] = heading_slugs(path.read_text())
+        return slug_cache[path]
+
+    for m in _LINK.finditer(_FENCE.sub("", text)):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, anchor = target.partition("#")
+        base = doc.parent / path_part if path_part else doc
+        if not base.exists():
+            problems.append(f"{rel}: broken link target ({target})")
+            continue
+        if anchor and anchor not in slugs_of(base):
+            problems.append(f"{rel}: broken anchor #{anchor} "
+                            f"(no such heading in {path_part or rel})")
+
+    for m in _BACKTICK_PATH.finditer(text):
+        token = m.group(1)
+        if not any((ROOT / r / token).exists() for r in PATH_ROOTS):
+            roots = ", ".join(repr(r) for r in PATH_ROOTS)
+            problems.append(f"{rel}: code path `{token}` does not exist "
+                            f"(tried roots {roots})")
+    return problems
+
+
+def check_section_refs(files, sections: set[int]) -> list[str]:
+    problems = []
+    for f in files:
+        for m in _SECTION_REF.finditer(f.read_text()):
+            n = int(m.group(1))
+            if n not in sections:
+                problems.append(
+                    f"{os.path.relpath(f, ROOT)}: cites DESIGN.md §{n} "
+                    f"but DESIGN.md has no such section")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("docs", nargs="*", default=list(DOCS),
+                    help="markdown files to check (default: %(default)s)")
+    args = ap.parse_args(argv)
+
+    slug_cache: dict[Path, set[str]] = {}
+    problems: list[str] = []
+    for name in args.docs:
+        doc = (ROOT / name).resolve()
+        if not doc.exists():
+            problems.append(f"{name}: checked doc itself is missing")
+            continue
+        problems += check_doc(doc, slug_cache)
+
+    sections = design_sections((ROOT / "DESIGN.md").read_text())
+    sources = [p for g in SOURCE_GLOBS for p in sorted(ROOT.glob(g))]
+    docs = [(ROOT / n) for n in args.docs if (ROOT / n).exists()]
+    problems += check_section_refs(docs + sources, sections)
+
+    for p in problems:
+        print(f"DOC-ROT: {p}", file=sys.stderr)
+    n_files = len(args.docs) + len(sources)
+    print(f"check_docs: {len(problems)} problem(s) across "
+          f"{n_files} file(s)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
