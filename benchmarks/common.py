@@ -133,7 +133,7 @@ def jsonable(obj):
     return obj
 
 
-def write_bench_json(name: str, payload, out_dir: str = ".") -> str:
+def write_bench_json(name: str, payload, out_dir: str = "bench-out") -> str:
     """Persist one benchmark's rows as BENCH_<name>.json (the artifact the
     bench-smoke CI lane uploads and compare.py gates against)."""
     os.makedirs(out_dir, exist_ok=True)

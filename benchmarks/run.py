@@ -70,6 +70,20 @@ def warm_tune(quick: bool) -> str:
     if not quick:
         autotune.tune_attention_chunk(2, 64, 64, 4, 2, 64, kv_bits=4)
         autotune.tune_attention_chunk(2, 64, 64, 4, 2, 64, kv_bits=0)
+    # fused decode-attention kv-split grid (DESIGN.md §20): both gated
+    # serve_microbench.run_attention_decode shapes (paged + contiguous)
+    ab, askv, ah, akvh, ahd, abits, aps = serve_microbench.ATTN_DECODE_SHAPE
+    autotune.tune_attention_decode(ab, askv, ah, akvh, ahd, kv_bits=abits,
+                                   page_size=aps, backend="xla")
+    autotune.tune_attention_decode(ab, askv, ah, akvh, ahd, kv_bits=abits,
+                                   backend="xla")
+    if not quick:
+        for bits in (0, 4):              # nightly full grid: float + 4-bit
+            autotune.tune_attention_decode(ab, askv, ah, akvh, ahd,
+                                           kv_bits=bits, page_size=aps,
+                                           backend="xla")
+            autotune.tune_attention_decode(ab, askv, ah, akvh, ahd,
+                                           kv_bits=bits, backend="xla")
     return autotune.active_cache().save()
 
 
@@ -102,8 +116,10 @@ def main() -> None:
                     help="smaller shapes (CI-speed)")
     ap.add_argument("--only", default="",
                     help="comma-list: fig4,fig5,table2,roofline,serve")
-    ap.add_argument("--out", default=".",
-                    help="directory for BENCH_<key>.json result files")
+    ap.add_argument("--out", default="bench-out",
+                    help="directory for BENCH_<key>.json result files "
+                         "(kept out of the repo root so stale artifacts "
+                         "never shadow the bench-out/ CI uploads)")
     ap.add_argument("--autotune", action="store_true",
                     help="warm-tune the bench kernel signatures into the "
                          "persisted autotune cache before running")

@@ -103,6 +103,11 @@ def run_linear(quick: bool = False):
 #: benchmarks through the Pallas tile grid.
 TUNED_LINEAR_SHAPE = (8, 256, 256)
 
+# (b, skv, h, kvh, hd, kv_bits, page_size) of the gated attention-decode
+# headline row; benchmarks/run.py warm-tunes exactly this signature so the
+# committed autotune cache can never desync from the gate (DESIGN.md §20)
+ATTN_DECODE_SHAPE = (4, 2048, 8, 4, 64, 2, 16)
+
 
 def _tuned_vs_heuristic_linear():
     """Decode-shaped Pallas packed matmul under the autotuned plan vs the
@@ -304,6 +309,133 @@ def run_kv_cache(quick: bool = False):
         })
     emit(rows, ["kv_bits", "cache_bytes_per_slot", "slots", "decode_tok_s",
                 "shrink_vs_bf16", "slots_vs_bf16"])
+    return rows
+
+
+def run_attention_decode(quick: bool = False):
+    """Fused flash-decoding attention read vs the legacy decode path
+    (kernels/ulppack_attention.py, DESIGN.md §20), same-run.
+
+    The legacy path gathers the paged cache into its logical [B, S] view
+    (unpaged: dequantizes the ring) and softmaxes one [B, H, S] score
+    row; the fused read walks the stored cache in online-softmax groups
+    and skips groups past the live high-water mark — so at serving
+    shapes (2048-token allocation, ~520 live) it pays O(live) where the
+    legacy path pays O(allocated).  ``attention_decode_speedup`` is a
+    same-run ratio at the paged sub-byte headline shape and carries a
+    hard floor; tests/test_fused_attention.py gates the numerics.  The
+    long-context ENGINE case (512-token prompts, kv_bits=2, paged) is
+    report-only: end-to-end decode tok/s where the fused read dominates
+    the step.
+    """
+    from repro.kernels import ulppack_attention as ua
+    from repro.models import attention as attn
+
+    b, skv, h, kvh, hd, kv_bits, ps = ATTN_DECODE_SHAPE
+    n_pages = skv // ps                   # 2048-token logical view
+    size = skv
+    live = 520
+    rng = np.random.default_rng(0)
+
+    def quantized(shape_rows):
+        k = jnp.asarray(rng.normal(size=(shape_rows, ps, kvh, hd)),
+                        jnp.float32)
+        v = jnp.asarray(rng.normal(size=(shape_rows, ps, kvh, hd)),
+                        jnp.float32)
+        qk, sk = attn._kv_quantize(k, kv_bits)
+        qv, sv = attn._kv_quantize(v, kv_bits)
+        return {"k": qk, "v": qv, "k_scale": sk, "v_scale": sv}
+
+    q = jnp.asarray(rng.normal(size=(b, 1, h, hd)), jnp.float32)
+    vl = jnp.full((b,), live, jnp.int32)
+    qpos = jnp.full((b, 1), live - 1, jnp.int32)
+
+    def legacy(cache, bt):
+        def fn(q, cache, vl, qpos):
+            if bt is None:
+                k, v = attn._cache_read(cache, jnp.float32, kv_bits, hd)
+            else:
+                k, v = attn._paged_cache_read(cache, bt, jnp.float32,
+                                              kv_bits, hd)
+            kv_pos = attn._ring_positions_batch(vl - 1, size, 0)
+            mask = (kv_pos[:, None, :] <= qpos[:, :, None]) \
+                & (kv_pos[:, None, :] >= 0)
+            return attn._chunked_attention(
+                q, lambda: (k, v), lambda _: mask, qpos, 1)
+        return jax.jit(fn)
+
+    def fused(bt):
+        def fn(q, cache, vl, qpos):
+            return ua.fused_decode_attention(q, cache, vl, qpos,
+                                             kv_bits=kv_bits, hd=hd,
+                                             block_tables=bt,
+                                             backend="xla")
+        return jax.jit(fn)
+
+    rows = []
+    for case, paged in (("attention-decode/paged-kv2", True),
+                        ("attention-decode/contiguous-kv2", False)):
+        if paged:
+            cache = quantized(b * n_pages)
+            bt = jnp.asarray(np.arange(b * n_pages).reshape(b, n_pages),
+                             jnp.int32)
+        else:
+            pool = quantized(b * n_pages)
+            cache = {kk: vv.reshape(b, size, *vv.shape[2:])
+                     for kk, vv in pool.items()}
+            bt = None
+        old_fn, new_fn = legacy(cache, bt), fused(bt)
+        diff = float(jnp.max(jnp.abs(new_fn(q, cache, vl, qpos)
+                                     - old_fn(q, cache, vl, qpos))))
+        old_us = wall_us(old_fn, q, cache, vl, qpos)
+        new_us = wall_us(new_fn, q, cache, vl, qpos)
+        row = {
+            "case": case, "kv_bits": kv_bits, "alloc_tokens": size,
+            "live_tokens": live, "page_size": ps if paged else 0,
+            "legacy_us": round(old_us, 1), "fused_us": round(new_us, 1),
+            "attention_decode_speedup": round(old_us / max(new_us, 1e-9),
+                                              2),
+            "max_abs_diff": round(diff, 7),
+        }
+        if paged:
+            row["floor"] = {"attention_decode_speedup": 1.3}
+        rows.append(row)
+
+    # long-context engine case: report-only end-to-end tok/s
+    from repro import configs
+    from repro.core.quant import QuantConfig
+    from repro.models import lm
+    from repro.serve.config import EngineConfig
+    from repro.serve.engine import Metrics, Request, ServingEngine
+
+    cfg = configs.get_config("stablelm-1.6b", reduced=True).replace(
+        param_dtype="float32", compute_dtype="float32", head_dim=64,
+        quant=QuantConfig(enabled=False, kv_bits=2))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    prompt_len, new_tokens = 512, 4 if quick else 8
+    eng = ServingEngine(cfg, params, config=EngineConfig(
+        max_batch=2, max_len=prompt_len + new_tokens + 2, packed=False,
+        prefill_chunk=64, paged=True, page_size=ps))
+    prompts = [rng.integers(0, cfg.vocab_size, prompt_len)
+               .astype(np.int32) for _ in range(2)]
+    eng.submit(Request(uid=10_000, prompt=prompts[0], max_new_tokens=2))
+    eng.run_to_completion()
+    eng.metrics = Metrics()
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=new_tokens))
+    eng.run_to_completion()
+    rep = eng.metrics.report()
+    rows.append({
+        "case": "attention-decode/long-context-engine",
+        "kv_bits": 2, "alloc_tokens": prompt_len + new_tokens + 2,
+        "live_tokens": prompt_len, "page_size": ps,
+        "prompt_len": prompt_len,
+        "decode_tok_s": rep["decode_tok_s"],
+        "prefill_tok_s": rep["prefill_tok_s"],
+    })
+    emit(rows, ["case", "kv_bits", "alloc_tokens", "live_tokens",
+                "legacy_us", "fused_us", "attention_decode_speedup",
+                "decode_tok_s"])
     return rows
 
 
@@ -617,6 +749,7 @@ def run(quick: bool = False):
     return {"linear": run_linear(quick),
             "engine": run_engine(quick),
             "kv_cache": run_kv_cache(quick),
+            "attention_decode": run_attention_decode(quick),
             "paged": run_paged(quick),
             "sharded": run_sharded(quick),
             "router": run_router(quick),

@@ -76,6 +76,9 @@ MATMUL_BLOCK_N = (32, 64, 128, 256)
 MATMUL_CHUNKS = (1, 2, 4, 8, 16)
 CONV_BLOCK_CO = (4, 8, 16, 32)
 ATTN_CHUNKS = (32, 64, 128, 256, 512)
+#: KV token rows per online-softmax group of the fused decode kernel
+#: (DESIGN.md §20); paged shapes round each candidate to whole pages.
+ATTN_DECODE_SPLITS = (64, 128, 256, 512, 1024)
 
 _REPO_ROOT = Path(__file__).resolve().parents[3]
 
@@ -118,6 +121,14 @@ def attention_key(b: int, sq: int, skv: int, h: int, kvh: int, hd: int,
                   kv_bits: int) -> str:
     return (f"attention_chunk|b={b}|sq={sq}|skv={skv}|h={h}|kvh={kvh}"
             f"|hd={hd}|kv_bits={kv_bits}")
+
+
+def attention_decode_key(b: int, skv: int, h: int, kvh: int, hd: int,
+                         kv_bits: int, *, page_size: int | None,
+                         backend: str) -> str:
+    paged = f"|ps={page_size}" if page_size else ""
+    return (f"attention_decode|{backend}|b={b}|skv={skv}|h={h}|kvh={kvh}"
+            f"|hd={hd}|kv_bits={kv_bits}{paged}")
 
 
 def matmul_layout_key(k: int, n: int, w_bits: int, a_bits: int, *,
@@ -760,3 +771,104 @@ def attention_chunk_for(b: int, sq: int, skv: int, h: int, kvh: int,
     if entry and isinstance(entry.get("q_chunk"), int):
         return entry["q_chunk"]
     return default
+
+
+def attention_decode_candidates(skv: int, page_size: int | None,
+                                kvh: int, hd: int, groups: int,
+                                budget: int) -> list[int]:
+    """block_k candidates (KV rows per group) under the VMEM budget;
+    paged shapes are rounded to whole pages and deduped."""
+    cands = []
+    for bk in _pow2_cap(ATTN_DECODE_SPLITS, skv):
+        if page_size:
+            bk = max(1, min(bk // page_size, -(-skv // page_size))) \
+                * page_size
+        bk = min(bk, skv)
+        if bk in cands:
+            continue
+        if plan_lib.attention_decode_working_set(bk, kvh, hd,
+                                                 groups) <= budget:
+            cands.append(bk)
+    return cands or [min(page_size or skv, skv)]
+
+
+def tune_attention_decode(b: int, skv: int, h: int, kvh: int, hd: int, *,
+                          kv_bits: int = 0, page_size: int | None = None,
+                          backend: str = "auto",
+                          vmem_budget: int | None = None,
+                          cache: TuningCache | None = None,
+                          repeats: int = 3, force: bool = False,
+                          seed: int = 0) -> dict:
+    """Benchmark the kv-split grid of the fused flash-decoding attention
+    (kernels/ulppack_attention.py, DESIGN.md §20) for one decode signature
+    and persist the winner.
+
+    The synthetic workload matches the serving decode shape: sq == 1
+    queries against a ``skv``-row stored cache (paged: a pool of
+    ``skv / page_size`` pages behind an identity block table) with every
+    row ~2/3 live — the dead-split skip is part of what the grid trades
+    off, so candidates must see some dead tail.
+    """
+    from repro.kernels import ulppack_attention  # registers the backends
+    from repro.models import attention as attn
+
+    backend = plan_lib.resolve_backend(backend)
+    cache = cache if cache is not None else active_cache()
+    key = attention_decode_key(b, skv, h, kvh, hd, kv_bits,
+                               page_size=page_size, backend=backend)
+    if not force:
+        hit = cache.lookup(key)
+        if hit is not None:
+            return hit
+    budget = vmem_budget or int(hw.VMEM_PER_CORE * plan_lib.VMEM_FRACTION)
+    groups = max(1, h // kvh)
+    heur = plan_lib.plan_attention_decode(
+        b, skv, h, kvh, hd, kv_bits, page_size=page_size, backend=backend,
+        vmem_budget=vmem_budget, use_tuning_cache=False)
+
+    rng = np.random.default_rng(seed)
+    k = jnp.asarray(rng.normal(size=(b, skv, kvh, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, skv, kvh, hd)), jnp.float32)
+    if kv_bits in (8, 4, 2):
+        qk, sk = attn._kv_quantize(k, kv_bits)
+        qv, sv = attn._kv_quantize(v, kv_bits)
+        kv = {"k": qk, "v": qv, "k_scale": sk, "v_scale": sv}
+    else:
+        kv = {"k": k, "v": v}
+    bt = None
+    if page_size:
+        n_pages = skv // page_size
+        kv = {name: buf.reshape(b * n_pages, page_size, *buf.shape[2:])
+              for name, buf in kv.items()}
+        bt = jnp.asarray(np.arange(b * n_pages).reshape(b, n_pages),
+                         jnp.int32)
+    q = jnp.asarray(rng.normal(size=(b, 1, h, hd)), jnp.float32)
+    live = max(1, (2 * skv) // 3)
+    valid_len = jnp.full((b,), live, jnp.int32)
+    qpos = jnp.full((b, 1), live - 1, jnp.int32)
+
+    cands = attention_decode_candidates(skv, page_size, kvh, hd, groups,
+                                        budget)
+    if heur.block_k not in cands:
+        cands.append(heur.block_k)
+
+    best, heuristic_us = None, None
+    for bk in cands:
+        chunks = max(1, bk // page_size) if page_size else 1
+        ws = plan_lib.attention_decode_working_set(bk, kvh, hd, groups)
+        plan = dataclasses.replace(heur, block_k=bk, chunks=chunks,
+                                   vmem_bytes=ws, source="tuned")
+        fn = jax.jit(functools.partial(
+            ulppack_attention.fused_decode_attention, kv_bits=kv_bits,
+            hd=hd, plan=plan, block_tables=bt))
+        us = measure_us(fn, q, kv, valid_len, qpos, repeats=repeats)
+        if bk == heur.block_k:
+            heuristic_us = us
+        if best is None or us < best[0]:
+            best = (us, ws, bk, chunks)
+
+    us, ws, bk, chunks = best
+    entry = _entry((us, ws), heuristic_us, len(cands),
+                   block_k=bk, chunks=chunks)
+    _store(cache, key, entry)
+    return entry

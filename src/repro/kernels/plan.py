@@ -197,6 +197,15 @@ def conv2d_working_set(block_h: int, block_co: int, *, fh: int, fw: int,
     return x_tile + w_bytes + acc_out
 
 
+def attention_decode_working_set(block_k: int, kvh: int, hd: int,
+                                 groups: int) -> int:
+    """ulppack_attention per-program VMEM accounting: one KV group's
+    unpacked K + V f32 planes, the [KVH, G, block_k] score block, and the
+    (m, l, acc) online-softmax carry."""
+    return (2 * block_k * kvh * hd * 4 + kvh * groups * block_k * 4
+            + kvh * groups * (hd + 2) * 4)
+
+
 def _tuned_entry(key: str, budget: int, ws_ok) -> dict | None:
     """Consult the active autotune cache; entries whose tiles no longer fit
     the VMEM budget (stale cache, changed budget) are ignored.  ``ws_ok``
@@ -387,9 +396,68 @@ def plan_int_matmul(m: int, k: int, n: int, *, backend: str = "auto",
                       block_k=bk, vmem_bytes=working_set(bm, bn, bk))
 
 
+@functools.lru_cache(maxsize=None)
+def plan_attention_decode(b: int, skv: int, h: int, kvh: int, hd: int,
+                          kv_bits: int, *, page_size: int | None = None,
+                          backend: str = "auto",
+                          vmem_budget: int | None = None,
+                          use_tuning_cache: bool = True) -> KernelPlan:
+    """Plan the fused flash-decoding attention read (DESIGN.md §20).
+
+    ``skv`` is the logical view length (slot extent, or pages x page_size
+    for a paged cache); ``page_size`` non-None selects the paged variant.
+    Tile fields: ``block_k`` = KV token rows per online-softmax group,
+    ``chunks`` = block-table pages walked per group (paged only; always
+    ``block_k // page_size``).  The autotune cache is consulted first
+    (kernels/autotune.tune_attention_decode); the heuristic picks the
+    largest power-of-two group <= 512 rows that fits the VMEM budget —
+    groups only amortize the combine epilogue, so smaller is safe.
+    """
+    backend = resolve_backend(backend)
+    groups = max(1, h // kvh)
+    budget = vmem_budget or int(hw.VMEM_PER_CORE * VMEM_FRACTION)
+
+    def clamp(bk: int) -> tuple[int, int]:
+        """Round a candidate group length to the layout's grain: whole
+        pages when paged, <= skv always."""
+        if page_size:
+            pp = max(1, min(bk // page_size, -(-skv // page_size)))
+            return pp * page_size, pp
+        return min(max(1, bk), skv), 1
+
+    if use_tuning_cache:
+        from repro.kernels import autotune
+        entry = _tuned_entry(
+            autotune.attention_decode_key(b, skv, h, kvh, hd, kv_bits,
+                                          page_size=page_size,
+                                          backend=backend),
+            budget,
+            lambda e: attention_decode_working_set(int(e["block_k"]), kvh,
+                                                   hd, groups))
+        if entry is not None:
+            bk, chunks = clamp(int(entry["block_k"]))
+            return KernelPlan(
+                op="attention_decode", backend=backend,
+                interpret=default_interpret(), block_k=bk, chunks=chunks,
+                vmem_bytes=attention_decode_working_set(bk, kvh, hd,
+                                                        groups),
+                source="tuned")
+
+    bk = 512 if page_size is None else 8 * page_size
+    bk, chunks = clamp(bk)
+    while bk > (page_size or 1) and \
+            attention_decode_working_set(bk, kvh, hd, groups) > budget:
+        bk, chunks = clamp(bk // 2)
+    return KernelPlan(
+        op="attention_decode", backend=backend,
+        interpret=default_interpret(), block_k=bk, chunks=chunks,
+        vmem_bytes=attention_decode_working_set(bk, kvh, hd, groups))
+
+
 def clear_plan_cache():
     """Drop all memoized plans (tests / device changes)."""
     plan_packed_matmul.cache_clear()
     plan_packed_conv2d.cache_clear()
     plan_quantize_pack.cache_clear()
     plan_int_matmul.cache_clear()
+    plan_attention_decode.cache_clear()

@@ -1,0 +1,451 @@
+"""Fused sub-byte decode attention: flash-decoding over the packed KV cache.
+
+The serving decode hot path used to read the KV cache through
+``_cache_read`` / ``_paged_cache_read``: dequantize (or gather, for the
+paged pool) the ENTIRE allocated view, then run a two-pass softmax over a
+full ``[C, Sk]`` score block.  Sub-byte storage pays for itself only while
+the packed words stay packed until the compute instruction (the paper's
+``vmacsr`` discipline; FullPack/Quark make the same point) — so this module
+restructures decode attention as flash-decoding (DESIGN.md §20):
+
+  * the KV length is split into groups (``plan.block_k`` token rows;
+    ``plan.chunks`` block-table pages per group when paged) and each group
+    is unpacked, dequantized and contracted in registers/VMEM;
+  * a running (max, sum, accumulator) carry combines groups — the online
+    softmax — so no full score block ever materializes;
+  * paged caches are walked group-by-group THROUGH the block table (the
+    whole-view ``pool[block_tables]`` gather copy disappears);
+  * groups entirely past every row's live length are skipped with a
+    ``lax.cond`` — the old path paid O(allocated), this one pays O(live);
+  * sub-byte scores fold the midpoint zero-point into the contraction:
+    ``s = scale_k * (q . u - zp * sum(q))`` and the value side
+    ``out += (p * scale_v) . u - zp * sum(p * scale_v)`` keep the lattice
+    integer until the per-group epilogue.
+
+Two registered backends for the ``attention_decode`` op:
+
+  'xla'    — the algorithm above in plain jnp (python-unrolled group loop).
+             This is the deployed CPU path and the only GSPMD-partitionable
+             one, so kv-head-sharded serving (``kv_shard_axis``) pins it.
+  'pallas' — the real kernel: grid (batch, kv-split), online-softmax carry
+             in VMEM scratch, shift-mask word unpack in-kernel, and — paged
+             — a scalar-prefetched block table whose entries ARE the
+             kv-split block indices (``PrefetchScalarGridSpec``), i.e. the
+             block-table walk happens in the kernel's index_map.  Runs
+             interpreted off-TPU (plan.default_interpret()).
+
+``fused_decode_attention`` is the models/attention.py entry point; the
+``REPRO_FUSED_DECODE=0`` environment kill-switch (read at trace time;
+launch/steps.py keys its jit memo on it) restores the legacy read path.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import plan as plan_lib
+
+NEG_INF = -1e30
+
+#: Environment kill-switch: "0" disables the fused decode path everywhere
+#: (models/attention.py falls back to the legacy whole-view read).  Read at
+#: trace time — launch/steps.py includes :func:`enabled` in its jit memo
+#: keys so flipping the flag never hits a stale trace.
+ENV_FLAG = "REPRO_FUSED_DECODE"
+
+
+def enabled() -> bool:
+    return os.environ.get(ENV_FLAG, "1") != "0"
+
+
+@contextlib.contextmanager
+def disabled():
+    """Context manager: run with the fused decode path off (tests use this
+    to produce legacy-path references from the same process)."""
+    old = os.environ.get(ENV_FLAG)
+    os.environ[ENV_FLAG] = "0"
+    try:
+        yield
+    finally:
+        if old is None:
+            os.environ.pop(ENV_FLAG, None)
+        else:
+            os.environ[ENV_FLAG] = old
+
+
+# ---------------------------------------------------------------------------
+# Shared pieces
+# ---------------------------------------------------------------------------
+
+def _unpack_group(words, bits, hd):
+    """int32 words [..., hdw] -> f32 lattice values [..., hd] (the shift/
+    mask expansion of packing.unpack_words, ascending field order)."""
+    per = 32 // bits
+    mask = (1 << bits) - 1
+    shifts = jnp.arange(per, dtype=jnp.int32) * bits
+    vals = (words[..., None] >> shifts) & mask          # [..., hdw, per]
+    vals = vals.reshape(*words.shape[:-1], words.shape[-1] * per)
+    return vals[..., :hd].astype(jnp.float32)
+
+
+def _prep_q(q, kvh):
+    """[B, C, H, hd] -> pre-scaled f32 [B, C, KVH, G, hd] + row sums."""
+    b, c, h, hd = q.shape
+    qg = (q.astype(jnp.float32) * hd ** -0.5).reshape(b, c, kvh,
+                                                      h // kvh, hd)
+    return qg, jnp.sum(qg, axis=-1)
+
+
+def _combine(carry, s, ok, u_v, ssv, zp):
+    """One online-softmax step: fold a group's masked scores ``s``
+    [B, C, KVH, G, L] and values ``u_v`` [B, L, KVH, hd] into the running
+    (max, sum, acc) carry.  ``ssv`` is the group's value-scale plane
+    broadcast like ``s`` (None for float caches), ``zp`` the lattice
+    midpoint (0 for symmetric/float storage)."""
+    m, l, acc = carry
+    s = jnp.where(ok, s, NEG_INF)
+    mn = jnp.maximum(m, jnp.max(s, axis=-1))
+    corr = jnp.exp(m - mn)
+    p = jnp.where(ok, jnp.exp(s - mn[..., None]), 0.0)
+    l2 = l * corr + jnp.sum(p, axis=-1)
+    pv = p if ssv is None else p * ssv
+    av = jnp.einsum("bckgs,bskd->bckgd", pv, u_v,
+                    preferred_element_type=jnp.float32)
+    if zp:
+        av = av - (zp * jnp.sum(pv, axis=-1))[..., None]
+    return mn, l2, acc * corr[..., None] + av
+
+
+def _group_scores(qg, qsum, gk, gsk, kv_bits, hd, zp):
+    """Scores of one KV group: ``gk`` is the group's stored K ([B, L, KVH,
+    hd] float, [B, L, KVH, hd] int8, or [B, L, KVH, hdw] packed words),
+    ``gsk`` its scale plane [B, L, KVH] (None for float caches).
+    Returns scores [B, C, KVH, G, L]."""
+    u = (_unpack_group(gk, kv_bits, hd) if kv_bits in (4, 2)
+         else gk.astype(jnp.float32))
+    s = jnp.einsum("bckgd,bskd->bckgs", qg, u,
+                   preferred_element_type=jnp.float32)
+    if gsk is not None:
+        ss = gsk.astype(jnp.float32).transpose(0, 2, 1)[:, None, :, None, :]
+        s = ss * (s - zp * qsum[..., None] if zp else s)
+    return s
+
+
+def _finish(carry, b, c, h, hd, out_dtype):
+    m, l, acc = carry
+    out = acc / jnp.where(l == 0, 1.0, l)[..., None]
+    return out.reshape(b, c, h, hd).astype(out_dtype)
+
+
+def _scale_broadcast(gsv):
+    if gsv is None:
+        return None
+    return gsv.astype(jnp.float32).transpose(0, 2, 1)[:, None, :, None, :]
+
+
+# ---------------------------------------------------------------------------
+# 'xla' backend — fused flash-decoding in plain jnp (CPU / sharded serving)
+# ---------------------------------------------------------------------------
+
+@plan_lib.register_backend("attention_decode", "xla")
+def _attention_decode_xla(plan, q, cache, valid_len, qpos, *, kv_bits, hd,
+                          block_tables=None):
+    """Python-unrolled group loop; each group guarded by a ``lax.cond`` on
+    ``group_start < max(valid_len)`` so fully-dead groups cost one scalar
+    compare instead of an unpack + two contractions."""
+    b, c, h, _ = q.shape
+    kvh = cache["k"].shape[2]
+    zp = (1 << (kv_bits - 1)) if kv_bits in (4, 2) else 0
+    quantized = "k_scale" in cache
+    qg, qsum = _prep_q(q, kvh)
+    groups = h // kvh
+    carry = (jnp.full((b, c, kvh, groups), NEG_INF, jnp.float32),
+             jnp.zeros((b, c, kvh, groups), jnp.float32),
+             jnp.zeros((b, c, kvh, groups, hd), jnp.float32))
+    live_max = jnp.max(valid_len)
+
+    if block_tables is not None:
+        page_rows = cache["k"].shape[1]
+        n_pages = block_tables.shape[1]
+        pp = max(1, plan.chunks or 1)
+        starts = range(0, n_pages, pp)
+    else:
+        skv = cache["k"].shape[1]
+        bk = max(1, plan.block_k or skv)
+        starts = range(0, skv, bk)
+
+    for g0 in starts:
+        if block_tables is not None:
+            t0 = g0 * page_rows
+
+            def read(g0=g0):
+                pages = block_tables[:, g0:g0 + pp]
+                span = pages.shape[1] * page_rows
+
+                def gather(buf):
+                    gg = buf[pages]
+                    return gg.reshape(b, span, *gg.shape[3:])
+                gk, gv = gather(cache["k"]), gather(cache["v"])
+                gsk = gather(cache["k_scale"]) if quantized else None
+                gsv = gather(cache["v_scale"]) if quantized else None
+                return gk, gv, gsk, gsv, span
+        else:
+            t0 = g0
+
+            def read(g0=g0):
+                sl = slice(g0, g0 + bk)
+                gk, gv = cache["k"][:, sl], cache["v"][:, sl]
+                gsk = cache["k_scale"][:, sl] if quantized else None
+                gsv = cache["v_scale"][:, sl] if quantized else None
+                return gk, gv, gsk, gsv, gk.shape[1]
+
+        def body(carry, read=read, t0=t0):
+            gk, gv, gsk, gsv, span = read()
+            s = _group_scores(qg, qsum, gk, gsk, kv_bits, hd, zp)
+            pos = t0 + jnp.arange(span, dtype=jnp.int32)
+            ok = ((pos[None, None, :] < valid_len[:, None, None])
+                  & (pos[None, None, :] <= qpos[:, :, None]))
+            ok = ok[:, :, None, None, :]
+            u_v = (_unpack_group(gv, kv_bits, hd) if kv_bits in (4, 2)
+                   else gv.astype(jnp.float32))
+            return _combine(carry, s, ok, u_v, _scale_broadcast(gsv), zp)
+
+        carry = jax.lax.cond(t0 < live_max, body, lambda cr: cr, carry)
+
+    return _finish(carry, b, c, h, hd, q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# 'pallas' backend — the real kernel (interpreted off-TPU)
+# ---------------------------------------------------------------------------
+
+def _decode_kernel(qg_ref, qs_ref, vl_ref, qp_ref, k_ref, v_ref, sk_ref,
+                   sv_ref, o_ref, m_ref, l_ref, acc_ref, *, kv_bits, hd,
+                   zp, span):
+    """Grid (B, n_splits): one batch row x one KV group per program.
+
+    Carry lives in VMEM scratch across the split sweep (same discipline as
+    ulppack_matmul's accumulator); split j covers token rows
+    ``j*span .. j*span+span`` of the row's logical view — for the paged
+    variant the group's pool block was already selected by the
+    block-table index_map, so position arithmetic is identical."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qg = qg_ref[0]                                  # [KVH, G, hd] f32
+    if kv_bits in (4, 2):
+        u_k = _unpack_group(k_ref[0], kv_bits, hd)  # [span, KVH, hd]
+        u_v = _unpack_group(v_ref[0], kv_bits, hd)
+    else:
+        u_k = k_ref[0].astype(jnp.float32)
+        u_v = v_ref[0].astype(jnp.float32)
+    # batched over KVH: [KVH, G, hd] x [span, KVH, hd] -> [KVH, G, span]
+    s = jax.lax.dot_general(qg, u_k, (((2,), (2,)), ((0,), (1,))),
+                            preferred_element_type=jnp.float32)
+    if sk_ref is not None:
+        ssk = sk_ref[0].astype(jnp.float32).T[:, None, :]   # [KVH, 1, span]
+        if zp:
+            s = ssk * (s - zp * qs_ref[0][..., None])
+        else:
+            s = ssk * s
+    pos = j * span + jnp.arange(span, dtype=jnp.int32)
+    ok = ((pos < vl_ref[0, 0]) & (pos <= qp_ref[0, 0]))[None, None, :]
+    s = jnp.where(ok, s, NEG_INF)
+    m = m_ref[...]
+    mn = jnp.maximum(m, jnp.max(s, axis=-1))
+    corr = jnp.exp(m - mn)
+    p = jnp.where(ok, jnp.exp(s - mn[..., None]), 0.0)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    if sv_ref is not None:
+        p = p * sv_ref[0].astype(jnp.float32).T[:, None, :]
+    # [KVH, G, span] x [span, KVH, hd] -> [KVH, G, hd]
+    av = jax.lax.dot_general(p, u_v, (((2,), (0,)), ((0,), (1,))),
+                             preferred_element_type=jnp.float32)
+    if zp:
+        av = av - (zp * jnp.sum(p, axis=-1))[..., None]
+    acc_ref[...] = acc_ref[...] * corr[..., None] + av
+    m_ref[...] = mn
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _done():
+        ll = l_ref[...]
+        o_ref[0] = acc_ref[...] / jnp.where(ll == 0, 1.0, ll)[..., None]
+
+
+def _pad_tokens(x, multiple):
+    rem = (-x.shape[1]) % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[1] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+@plan_lib.register_backend("attention_decode", "pallas")
+def _attention_decode_pallas(plan, q, cache, valid_len, qpos, *, kv_bits,
+                             hd, block_tables=None):
+    """Pallas flash-decoding kernel; sq == 1 decode only (the dispatcher
+    routes wider windows to the 'xla' backend).
+
+    Contiguous: grid (B, ceil(Sk / block_k)), token-sliced BlockSpecs.
+    Paged: grid (B, n_pages) under ``PrefetchScalarGridSpec`` — the
+    scalar-prefetched block table IS the pool index_map (``bt[i, j]``),
+    one page per grid step, so the kernel walks each row's page list
+    without ever materializing the gathered view."""
+    b, c, h, _ = q.shape
+    if c != 1:
+        raise ValueError("pallas attention_decode handles sq == 1 only")
+    kvh = cache["k"].shape[2]
+    groups = h // kvh
+    zp = (1 << (kv_bits - 1)) if kv_bits in (4, 2) else 0
+    quantized = "k_scale" in cache
+    qg, qsum = _prep_q(q, kvh)
+    qg = qg[:, 0]                                   # [B, KVH, G, hd]
+    qsum = qsum[:, 0]
+    vl = valid_len.astype(jnp.int32).reshape(b, 1)
+    qp = qpos[:, 0].astype(jnp.int32).reshape(b, 1)
+    word_dim = cache["k"].shape[-1]
+    scratch = [pltpu.VMEM((kvh, groups), jnp.float32),
+               pltpu.VMEM((kvh, groups), jnp.float32),
+               pltpu.VMEM((kvh, groups, hd), jnp.float32)]
+    out_shape = jax.ShapeDtypeStruct((b, kvh, groups, hd), jnp.float32)
+
+    if block_tables is not None:
+        page_rows = cache["k"].shape[1]
+        bt = jnp.clip(block_tables.astype(jnp.int32), 0,
+                      cache["k"].shape[0] - 1)
+        kern = functools.partial(_decode_kernel, kv_bits=kv_bits, hd=hd,
+                                 zp=zp, span=page_rows)
+        if not quantized:
+            kern = functools.partial(_no_scale_kernel, kern)
+        # scalar-prefetch operands are handed to the kernel as a leading
+        # ref; the index_maps already consumed the table, so drop it here
+        kern = functools.partial(_drop_prefetch_ref, kern)
+        # index_maps take (i, j, bt_ref): batch-row operands index by i,
+        # pool operands by the scalar-prefetched block table — the
+        # in-kernel block-table walk.
+        in_specs = [
+            pl.BlockSpec((1, kvh, groups, hd),
+                         lambda i, j, bt_: (i, 0, 0, 0)),
+            pl.BlockSpec((1, kvh, groups), lambda i, j, bt_: (i, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, bt_: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, bt_: (i, 0)),
+            pl.BlockSpec((1, page_rows, kvh, word_dim),
+                         lambda i, j, bt_: (bt_[i, j], 0, 0, 0)),
+            pl.BlockSpec((1, page_rows, kvh, word_dim),
+                         lambda i, j, bt_: (bt_[i, j], 0, 0, 0)),
+        ]
+        args = [qg, qsum, vl, qp, cache["k"], cache["v"]]
+        if quantized:
+            in_specs += [
+                pl.BlockSpec((1, page_rows, kvh),
+                             lambda i, j, bt_: (bt_[i, j], 0, 0)),
+                pl.BlockSpec((1, page_rows, kvh),
+                             lambda i, j, bt_: (bt_[i, j], 0, 0)),
+            ]
+            args += [cache["k_scale"], cache["v_scale"]]
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, block_tables.shape[1]),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, kvh, groups, hd),
+                                   lambda i, j, bt_: (i, 0, 0, 0)),
+            scratch_shapes=scratch)
+        out = pl.pallas_call(kern, grid_spec=grid_spec,
+                             out_shape=out_shape,
+                             interpret=plan.interpret)(bt, *args)
+        return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+    skv = cache["k"].shape[1]
+    bk = min(max(1, plan.block_k or skv), skv)
+    kern = functools.partial(_decode_kernel, kv_bits=kv_bits, hd=hd, zp=zp,
+                             span=bk)
+    if not quantized:
+        kern = functools.partial(_no_scale_kernel, kern)
+    in_specs = [
+        pl.BlockSpec((1, kvh, groups, hd), lambda i, j: (i, 0, 0, 0)),
+        pl.BlockSpec((1, kvh, groups), lambda i, j: (i, 0, 0)),
+        pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+        pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+        pl.BlockSpec((1, bk, kvh, word_dim), lambda i, j: (i, j, 0, 0)),
+        pl.BlockSpec((1, bk, kvh, word_dim), lambda i, j: (i, j, 0, 0)),
+    ]
+    ks = _pad_tokens(cache["k"], bk)
+    args = [qg, qsum, vl, qp, ks, _pad_tokens(cache["v"], bk)]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((1, bk, kvh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, bk, kvh), lambda i, j: (i, j, 0)),
+        ]
+        args += [_pad_tokens(cache["k_scale"], bk),
+                 _pad_tokens(cache["v_scale"], bk)]
+    out = pl.pallas_call(
+        kern,
+        grid=(b, ks.shape[1] // bk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, kvh, groups, hd),
+                               lambda i, j: (i, 0, 0, 0)),
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        interpret=plan.interpret,
+    )(*args)
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def _no_scale_kernel(kern, qg_ref, qs_ref, vl_ref, qp_ref, k_ref, v_ref,
+                     o_ref, m_ref, l_ref, acc_ref):
+    """Adapter for float (kv_bits 0/16) caches: no scale-plane operands."""
+    kern(qg_ref, qs_ref, vl_ref, qp_ref, k_ref, v_ref, None, None, o_ref,
+         m_ref, l_ref, acc_ref)
+
+
+def _drop_prefetch_ref(kern, bt_ref, *refs):
+    """Adapter for the paged variant: the scalar-prefetched block table
+    arrives as the kernel's leading ref but is only read by index_maps."""
+    kern(*refs)
+
+
+# ---------------------------------------------------------------------------
+# Entry point (models/attention.py)
+# ---------------------------------------------------------------------------
+
+def fused_decode_attention(q, cache, valid_len, qpos, *, kv_bits, hd,
+                           plan=None, block_tables=None, backend="auto"):
+    """Flash-decoding attention over the stored (possibly packed) cache.
+
+    q [B, C, H, hd]; ``cache`` the stored layout (init_kv_cache /
+    init_paged_kv_cache); ``valid_len`` [B] live token rows per sequence
+    (logical-view prefix); ``qpos`` [B, C] absolute query positions.
+    ``plan`` defaults to :func:`plan_attention_decode` for the shape;
+    the 'pallas' backend serves C == 1 only (wider verify windows route
+    to 'xla').  Returns [B, C, H, hd] in q.dtype.
+    """
+    b, c, h, _ = q.shape
+    kvh = cache["k"].shape[2]
+    if plan is None:
+        page_size = cache["k"].shape[1] if block_tables is not None else None
+        skv = (block_tables.shape[1] * cache["k"].shape[1]
+               if block_tables is not None else cache["k"].shape[1])
+        plan = plan_lib.plan_attention_decode(
+            b, skv, h, kvh, hd, kv_bits, page_size=page_size,
+            backend=backend)
+    if plan.backend == "pallas" and c != 1:
+        plan = dataclasses.replace(plan, backend="xla")
+    return plan_lib.dispatch(plan, q, cache,
+                             jnp.asarray(valid_len, jnp.int32),
+                             jnp.asarray(qpos, jnp.int32),
+                             kv_bits=kv_bits, hd=hd,
+                             block_tables=block_tables)

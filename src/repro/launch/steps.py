@@ -27,6 +27,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ulppack_attention
 from repro.models import lm
 from repro.optim import adamw, schedules
 
@@ -321,14 +322,22 @@ def jitted_serving_steps(cfg, *, kv_shard_axis: str | None = None,
     key = None if mesh is None else (
         tuple(d.id for d in mesh.devices.flat),
         tuple(sorted(mesh.shape.items())))
-    return _jitted_serving_steps(cfg, kv_shard_axis, key)
+    return _jitted_serving_steps(cfg, kv_shard_axis, key,
+                                 ulppack_attention.enabled())
 
 
 @functools.lru_cache(maxsize=None)
-def _jitted_serving_steps(cfg, kv_shard_axis, _mesh_key):
-    return (jax.jit(make_decode_step(cfg, kv_shard_axis=kv_shard_axis)),
+def _jitted_serving_steps(cfg, kv_shard_axis, _mesh_key, _fused):
+    # caches (arg 1) are donated: every engine call site reassigns its
+    # cache pytree from the step's return, so the old buffers are dead on
+    # entry and XLA may update the ring in place (DESIGN.md §20).  _fused
+    # keys the memo on the REPRO_FUSED_DECODE kill-switch, which is read
+    # at trace time — without it a flipped env var would hit stale traces.
+    return (jax.jit(make_decode_step(cfg, kv_shard_axis=kv_shard_axis),
+                    donate_argnums=(1,)),
             jax.jit(make_prefill_chunk_step(cfg,
-                                            kv_shard_axis=kv_shard_axis)))
+                                            kv_shard_axis=kv_shard_axis),
+                    donate_argnums=(1,)))
 
 
 def jitted_speculative_steps(cfg, draft_cfg, k: int, *,
@@ -346,16 +355,19 @@ def jitted_speculative_steps(cfg, draft_cfg, k: int, *,
     key = None if mesh is None else (
         tuple(d.id for d in mesh.devices.flat),
         tuple(sorted(mesh.shape.items())))
-    return (_jitted_draft_step(draft_cfg, k, kv_shard_axis, key),
-            _jitted_verify_step(cfg, kv_shard_axis, key))
+    fused = ulppack_attention.enabled()
+    return (_jitted_draft_step(draft_cfg, k, kv_shard_axis, key, fused),
+            _jitted_verify_step(cfg, kv_shard_axis, key, fused))
 
 
 @functools.lru_cache(maxsize=None)
-def _jitted_draft_step(cfg, k, kv_shard_axis, _mesh_key):
-    return jax.jit(make_draft_step(cfg, k, kv_shard_axis=kv_shard_axis))
+def _jitted_draft_step(cfg, k, kv_shard_axis, _mesh_key, _fused):
+    return jax.jit(make_draft_step(cfg, k, kv_shard_axis=kv_shard_axis),
+                   donate_argnums=(1,))
 
 
 @functools.lru_cache(maxsize=None)
-def _jitted_verify_step(cfg, kv_shard_axis, _mesh_key):
+def _jitted_verify_step(cfg, kv_shard_axis, _mesh_key, _fused):
     return jax.jit(make_verify_chunk_step(cfg,
-                                          kv_shard_axis=kv_shard_axis))
+                                          kv_shard_axis=kv_shard_axis),
+                   donate_argnums=(1,))

@@ -251,6 +251,43 @@ def _constrain_kv_heads(tree, axis):
     return one(tree)
 
 
+def _fused_decode_epilogue(p, cfg, q, read_cache, valid_len, positions,
+                           kv_bits, new_cache, qm, kv_shard_axis,
+                           block_tables=None):
+    """Decode tail via the fused flash-decoding read (DESIGN.md §20):
+    kernels/ulppack_attention walks the stored — possibly paged — cache in
+    online-softmax groups, so neither the dequantized view, the gathered
+    paged view, nor a full score block materializes.  ``valid_len`` [B] is
+    each row's live logical-view prefix; the group mask
+    ``pos < valid_len & pos <= qpos`` is exactly the legacy
+    ``_ring_positions*`` visibility for non-windowed caches.  Sharded
+    serving (``kv_shard_axis``) pins the 'xla' backend — the only GSPMD-
+    partitionable one."""
+    from repro.kernels import ulppack_attention
+
+    b, sq, h, hd = q.shape
+    if positions.ndim == 1:
+        positions = jnp.broadcast_to(positions[None, :], (b, sq))
+    backend = "xla" if kv_shard_axis is not None else "auto"
+    out = ulppack_attention.fused_decode_attention(
+        q, read_cache, valid_len, positions, kv_bits=kv_bits, hd=hd,
+        block_tables=block_tables, backend=backend)
+    out = dense_apply(p["o"], out.reshape(b, sq, h * hd), **qm)
+    return out, new_cache
+
+
+def _use_fused_decode(window, kv_x, idx, sq) -> bool:
+    """Trace-time gate for the fused decode read: self-attention decode
+    over a non-windowed cache (sliding-window rings keep the legacy ring-
+    position mask; scalar lockstep callers beyond one token predate the
+    per-row valid_len semantics)."""
+    from repro.kernels import ulppack_attention
+
+    if not ulppack_attention.enabled() or window or kv_x is not None:
+        return False
+    return idx.ndim > 0 or sq == 1
+
+
 def _attention_epilogue(p, cfg, q, kv_fn, mask_fn, positions, q_chunk,
                         skv, kv_bits, new_cache, qm):
     """Shared attention tail: positions broadcast, autotuned q-chunk
@@ -367,6 +404,12 @@ def attention_apply(p, cfg, x, *, positions, quant_mode="none",
             kv_pos = _ring_positions_batch(idx + vlen - 1, size,
                                            0)                  # [B, size]
             new_cache = _constrain_kv_heads(new_cache, kv_shard_axis)
+            if _use_fused_decode(window, kv_x, idx, sq):
+                # zero-copy step: the fused read walks the pool through
+                # the block table, so the [B, size] gather never happens
+                return _fused_decode_epilogue(
+                    p, cfg, q, new_cache, idx + vlen, positions, kv_bits,
+                    new_cache, qm, kv_shard_axis, block_tables=bt)
             read_cache, kv_dtype = new_cache, k.dtype
             kv_fn = lambda: _paged_cache_read(read_cache, bt, kv_dtype,
                                               kv_bits, hd)
@@ -408,6 +451,12 @@ def attention_apply(p, cfg, x, *, positions, quant_mode="none",
             kv_pos = _ring_positions_batch(idx + vlen - 1, size,
                                            window)            # [B, size]
         new_cache = _constrain_kv_heads(new_cache, kv_shard_axis)
+        if _use_fused_decode(window, kv_x, idx, sq):
+            valid_len = (jnp.full((b,), idx + sq, jnp.int32)
+                         if idx.ndim == 0 else idx + vlen)
+            return _fused_decode_epilogue(p, cfg, q, new_cache, valid_len,
+                                          positions, kv_bits, new_cache,
+                                          qm, kv_shard_axis)
         # deferred read: _chunked_attention calls this inside the chunk
         # body, so a packed cache is unpacked+dequantized fused with the
         # score/value einsums (the bf16 cache copy never exists whole)
